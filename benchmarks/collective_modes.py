@@ -1,0 +1,62 @@
+"""Collective-payload comparison: paper-faithful f32 wire vs the beyond-paper
+integer-code wire (quantized psum), lowered on an 8-device debug mesh.
+
+Runs in a subprocess so the forced device count never leaks into other
+benchmarks (the brief: only the dry-run sees >1 device globally).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+CODE = """
+import dataclasses, time, jax, jax.numpy as jnp
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.core.fl import make_fl_round
+from repro.data.synthetic import token_batch
+from repro.utils.hlo import collective_bytes
+
+mesh = jax.make_mesh((2,4), ("data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = reduced(get_config("olmo-1b"))
+model = build_model(cfg)
+batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
+p = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+out = {}
+with jax.set_mesh(mesh):
+    for mode in ("paper", "int"):
+        t0 = time.perf_counter()
+        f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
+        txt = f.lower(p, batch, rng).compile().as_text()
+        cb = collective_bytes(txt)
+        out[mode] = (cb["total"], (time.perf_counter()-t0)*1e6)
+print("RESULT", out["paper"][0], out["int"][0], out["paper"][1], out["int"][1])
+"""
+
+
+def run() -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("PYTHONPATH", "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(CODE)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    if r.returncode != 0:
+        emit("collective_modes", 0.0, f"FAIL:{r.stderr[-160:]}")
+        return
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
+    _, cb_paper, cb_int, us_p, us_i = line.split()
+    reduction = 1.0 - float(cb_int) / float(cb_paper)
+    emit("collective_paper_f32_wire", float(us_p),
+         f"collective_bytes={cb_paper}")
+    emit("collective_int_wire", float(us_i),
+         f"collective_bytes={cb_int};reduction_vs_paper={reduction:.2%}")
+
+
+if __name__ == "__main__":
+    run()

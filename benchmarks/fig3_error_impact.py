@@ -1,0 +1,109 @@
+"""Paper Fig. 3: impact of transmission error probability q on FL training.
+
+Trains the paper's QNN federatedly (no quantization, as in the paper's
+experiment) under the NAIVE eq. 5 aggregation the paper's Fig. 3 motivates
+against (drops become silent zeros), plus one error-aware (eq. 6) series at
+the worst q — the paper's proposed mitigation.
+
+Scaling note: the paper separates q ∈ {0, 0.1, 0.2} over hundreds of rounds;
+this harness has ~16 CPU rounds, so we use q ∈ {0, 0.3, 0.6} (same mechanism,
+larger dose) and average 2 seeds to beat SGD noise.  Expectation: mean
+accuracy decreases with q; error-aware aggregation recovers the q=0.6 gap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.fl import FLSimulator
+from repro.data.pipeline import ClientStore, partition_iid
+from repro.data.synthetic import digit_dataset
+from repro.models import build_model
+
+ROUNDS = 12
+SEEDS = (0, 1)
+Q_VALUES = (0.0, 0.3, 0.6)
+HOLDOUT = 512
+
+
+def _data_and_store(key, num_samples=3000, num_clients=20):
+    data = digit_dataset(key, num_samples + HOLDOUT, noise=0.8)
+    train = {k: v[:num_samples] for k, v in data.items()}
+    hold = {k: v[num_samples:] for k, v in data.items()}
+    parts = partition_iid(jax.random.fold_in(key, 1), num_samples, num_clients)
+    return ClientStore(train, parts), hold
+
+
+def make_eval(model, holdout):
+    images, labels = holdout["images"], holdout["labels"]
+
+    @jax.jit
+    def acc(params):
+        logits = model.forward(params, images)
+        return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+    return acc
+
+
+def _train_mean(cfg, store, holdout, rounds):
+    """Mean holdout-accuracy curve over SEEDS."""
+    model = build_model(cfg)
+    sim = FLSimulator(model, cfg, store)
+    eval_fn = make_eval(model, holdout)
+    curves = []
+    t0 = time.perf_counter()
+    for seed in SEEDS:
+        params = model.init(jax.random.PRNGKey(1 + seed))
+        _, hist = sim.train(params, rounds, jax.random.PRNGKey(100 + seed),
+                            eval_fn=eval_fn)
+        curves.append([h["accuracy"] for h in hist])
+    us = (time.perf_counter() - t0) * 1e6 / (rounds * len(SEEDS))
+    return us, np.mean(curves, axis=0)
+
+
+def run(rounds: int = ROUNDS) -> None:
+    base = get_config("mnist_cnn")
+    base = dataclasses.replace(
+        base,
+        quant=dataclasses.replace(base.quant, bits=0),     # paper: no quant here
+        # lr=0.02: at higher lr the q=0 runs OVERSHOOT and drops act as a
+        # beneficial lr damper, inverting the paper's trend (see EXPERIMENTS
+        # §Paper-claims note) — the trend holds where the base lr is tuned
+        fl=dataclasses.replace(base.fl, devices_per_round=5, local_iters=3,
+                               learning_rate=0.02, error_aware=False),
+        train=dataclasses.replace(base.train, global_batch=32))
+    store, holdout = _data_and_store(jax.random.PRNGKey(0))
+
+    area = {}
+    for q in Q_VALUES:
+        cfg = dataclasses.replace(
+            base, channel=dataclasses.replace(base.channel, error_prob=q))
+        us, curve = _train_mean(cfg, store, holdout, rounds)
+        area[q] = float(np.mean(curve))   # area under the accuracy curve
+        emit(f"fig3_naive_q{q}", us,
+             f"final_acc={curve[-1]:.4f};mean_acc={area[q]:.4f};"
+             f"acc_curve={'|'.join(f'{a:.3f}' for a in curve)}")
+
+    # the paper's mitigation: error-aware eq. 6 at the worst q
+    q_bad = Q_VALUES[-1]
+    cfg = dataclasses.replace(
+        base, fl=dataclasses.replace(base.fl, error_aware=True),
+        channel=dataclasses.replace(base.channel, error_prob=q_bad))
+    us, curve = _train_mean(cfg, store, holdout, rounds)
+    emit(f"fig3_error_aware_q{q_bad}", us,
+         f"final_acc={curve[-1]:.4f};mean_acc={float(np.mean(curve)):.4f};"
+         f"recovers_vs_naive={float(np.mean(curve)) - area[q_bad]:+.4f};"
+         f"acc_curve={'|'.join(f'{a:.3f}' for a in curve)}")
+
+    # paper trend: clean channel must dominate the heavy-drop channel
+    assert area[0.0] >= area[Q_VALUES[-1]] - 0.02, area
+
+
+if __name__ == "__main__":
+    run()

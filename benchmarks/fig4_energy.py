@@ -1,0 +1,75 @@
+"""Paper Fig. 4: energy + time to target accuracy across quantization levels.
+
+For n in {4, 8, 16, 32=non-quantized} train the QNN federatedly at the
+optimal operating point (P_tx ~ 0.1, q ~ 0.01) until the target accuracy,
+then report total energy (rounds x per-round energy from §II-D) and time.
+Headline claim: FP8 ~ 75.31% lower energy than non-quantized FL.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.fl import FLSimulator
+from repro.data.pipeline import make_federated_digits
+from repro.models import build_model
+
+TARGET_ACC = 0.90
+MAX_ROUNDS = 40
+BIT_LEVELS = (4, 8, 16, 32)
+
+
+def run(target: float = TARGET_ACC, max_rounds: int = MAX_ROUNDS) -> None:
+    base = get_config("mnist_cnn")
+    base = dataclasses.replace(
+        base,
+        channel=dataclasses.replace(base.channel, tx_power_w=0.1,
+                                    error_prob=0.01),
+        fl=dataclasses.replace(base.fl, devices_per_round=5, local_iters=3,
+                               learning_rate=0.05),
+        train=dataclasses.replace(base.train, global_batch=32))
+    store = make_federated_digits(jax.random.PRNGKey(0), num_samples=3000,
+                                  num_clients=20)
+
+    results = {}
+    for bits in BIT_LEVELS:
+        # bits=32 == the paper's "non-quantized FL" baseline
+        qcfg = dataclasses.replace(base.quant, bits=0 if bits == 32 else bits)
+        cfg = dataclasses.replace(base, quant=qcfg)
+        model = build_model(cfg)
+        sim = FLSimulator(model, cfg, store,
+                          macs_per_iter=base.energy.macs_per_iteration)
+        # energy model uses the wire/compute precision (32 for non-quantized)
+        params = model.init(jax.random.PRNGKey(1))
+        t0 = time.perf_counter()
+        params, hist = sim.train(params, max_rounds, jax.random.PRNGKey(2),
+                                 target_accuracy=target)
+        wall = time.perf_counter() - t0
+        rounds = len(hist)
+        reached = hist[-1]["accuracy"] >= target
+        e_round, tau_round = sim.round_energy()
+        total_e = e_round * rounds
+        total_tau = tau_round * rounds
+        results[bits] = dict(energy=total_e, tau=total_tau, rounds=rounds,
+                             acc=hist[-1]["accuracy"], reached=reached)
+        emit(f"fig4_energy_fp{bits}", wall * 1e6 / rounds,
+             f"rounds={rounds};acc={hist[-1]['accuracy']:.3f};"
+             f"energy_J={total_e:.2f};sim_time_s={total_tau:.3f};"
+             f"target_reached={reached}")
+
+    e32 = results[32]["energy"]
+    for bits in (4, 8, 16):
+        saving = 1.0 - results[bits]["energy"] / e32
+        status = "" if results[bits]["reached"] else \
+            ";NOTE=target NOT reached (QAT too coarse) — energy is a lower bound"
+        emit(f"fig4_saving_fp{bits}_vs_fp32", 0.0,
+             f"energy_saving={saving:.2%};paper_claim_fp8=75.31%{status}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Microbenchmarks of the Pallas kernels (interpret mode on CPU) vs their
+pure-jnp oracles — correctness-weighted timing, one row per kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops, ref
+
+
+def run() -> None:
+    d = 421_642  # the paper's QNN size
+    x = jax.random.uniform(jax.random.PRNGKey(0), (d,), minval=-1, maxval=1)
+    key = jax.random.PRNGKey(1)
+
+    us = time_call(lambda: ops.stochastic_quantize_codes(x, key, 8))
+    u = jax.random.uniform(key, x.shape)
+    want = ref.stochastic_quantize_ref(x, u, 8)
+    emit("kernel_quantize_421k", us, f"bits=8;n={d};oracle=ref.py")
+
+    xq = jax.random.randint(jax.random.PRNGKey(2), (256, 512), -128, 128, jnp.int8)
+    wq = jax.random.randint(jax.random.PRNGKey(3), (512, 256), -128, 128, jnp.int8)
+    us = time_call(lambda: ops.qmatmul(xq, wq, 0.01, 0.02))
+    got = ops.qmatmul(xq, wq, 0.01, 0.02)
+    err = float(jnp.abs(got - ref.qmatmul_ref(xq, wq, 0.01, 0.02)).max())
+    emit("kernel_qmatmul_256x512x256", us, f"max_err={err:.2e}")
+
+    upd = jax.random.normal(jax.random.PRNGKey(4), (10, d))
+    w = jax.random.uniform(jax.random.PRNGKey(5), (10,))
+    us = time_call(lambda: ops.masked_aggregate(upd, w))
+    got = ops.masked_aggregate(upd, w)
+    err = float(jnp.abs(got - ref.masked_aggregate_ref(upd, w)).max())
+    emit("kernel_aggregate_K10_421k", us, f"max_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and emits one CSV row per (arch x shape x
+mesh): the three terms (seconds), the dominant one, per-device memory, and
+MODEL_FLOPS/HLO ratios.  ``python -m benchmarks.roofline_report`` also prints
+the markdown table used in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(pattern: str = "*.json") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            rec = json.load(f)
+        rec["_tag"] = os.path.splitext(os.path.basename(path))[0]
+        recs.append(rec)
+    return recs
+
+
+def run() -> None:
+    recs = load_records()
+    if not recs:
+        emit("roofline_report", 0.0, "no dryrun artifacts; run repro.launch.dryrun first")
+        return
+    n_ok = n_skip = n_fail = 0
+    for r in recs:
+        tag = r.get("_tag") or f"{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] == "SKIP":
+            n_skip += 1
+            emit(f"roofline_{tag}", 0.0, "SKIP")
+            continue
+        if r["status"] != "OK":
+            n_fail += 1
+            emit(f"roofline_{tag}", 0.0, f"FAIL:{r.get('error','')[:80]}")
+            continue
+        n_ok += 1
+        t = r["roofline"]
+        mem_gib = r["memory"]["peak_estimate_bytes"] / 2 ** 30
+        emit(f"roofline_{tag}", r["compile_s"] * 1e6,
+             f"compute_s={t['compute_s']:.3e};memory_s={t['memory_s']:.3e};"
+             f"collective_s={t['collective_s']:.3e};dominant={t['dominant']};"
+             f"mem_GiB={mem_gib:.2f};useful_ratio={t['useful_flops_ratio']:.2f}")
+    emit("roofline_summary", 0.0, f"ok={n_ok};skip={n_skip};fail={n_fail}")
+
+
+def markdown_table(mesh: str = "single", *, baselines_only: bool = True) -> str:
+    rows = ["| arch | shape | step | compute s | memory s | collective s | "
+            "dominant | mem/dev GiB | 6ND/HLO |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load_records():
+        if r.get("mesh") != mesh:
+            continue
+        # baseline tags are <arch>_<shape>_<mesh> = 3 underscores (arch names
+        # use dashes); hillclimb-iteration artifacts append _<iter> suffixes
+        if baselines_only and r.get("_tag", "").count("_") > 3:
+            continue
+        if r["status"] == "SKIP":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                        f"SKIP | — | — |")
+            continue
+        if r["status"] != "OK":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | **{t['dominant']}** "
+            f"| {r['memory']['peak_estimate_bytes']/2**30:.1f} "
+            f"| {t['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    run()
+    print()
+    print(markdown_table())

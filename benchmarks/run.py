@@ -1,0 +1,57 @@
+"""Benchmark registry — one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,fig4] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+REGISTRY = {
+    "fig2": ("paper Fig. 2: CMA-ES convergence of (P_tx, q)",
+             "benchmarks.fig2_cmaes"),
+    "fig3": ("paper Fig. 3: transmission-error impact on FL accuracy",
+             "benchmarks.fig3_error_impact"),
+    "fig4": ("paper Fig. 4: energy vs quantization level (75.31% claim)",
+             "benchmarks.fig4_energy"),
+    "kernels": ("Pallas kernel microbenches vs ref.py",
+                "benchmarks.kernels_micro"),
+    "collectives": ("paper f32 wire vs quantized int wire (beyond-paper)",
+                    "benchmarks.collective_modes"),
+    "roofline": ("roofline table from dry-run artifacts",
+                 "benchmarks.roofline_report"),
+    "ablations": ("non-IID split + Pallas-kernel-in-the-loop ablations",
+                  "benchmarks.ablations"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(REGISTRY))
+    args = ap.parse_args()
+    selected = [s for s in args.only.split(",") if s] or list(REGISTRY)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key in selected:
+        desc, modname = REGISTRY[key]
+        print(f"# {key}: {desc}", file=sys.stderr)
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{key}_FAILED,0.0,{traceback.format_exc(limit=2)!r}")
+        print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark groups failed")
+
+
+if __name__ == "__main__":
+    main()

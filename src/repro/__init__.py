@@ -1,0 +1,11 @@
+"""repro — Energy-Efficient Quantized Federated Learning (multi-pod JAX).
+
+Public API entry points:
+  repro.configs.get_config(name)      architecture registry
+  repro.models.build_model(config)    model factory (loss/prefill/decode)
+  repro.core.fl.FLSimulator           the paper's Algorithm 1 (N devices)
+  repro.core.fl.make_fl_round         FL round as a multi-pod collective
+  repro.core.optimize.joint_optimize  CMA-ES (P_tx, q, n) energy planner
+  repro.launch.dryrun                 multi-pod lower+compile sweep
+"""
+__version__ = "0.1.0"

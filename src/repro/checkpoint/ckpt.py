@@ -1,0 +1,84 @@
+"""msgpack pytree checkpointing (orbax is not available offline).
+
+Arrays are stored as raw bytes + dtype/shape; the pytree structure is
+reconstructed on restore against a template (so custom containers survive).
+Retention: ``keep`` most recent steps.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^ckpt_(\d+)\.msgpack$")
+
+
+def _encode(leaf):
+    arr = np.asarray(leaf)
+    # bfloat16 has no portable msgpack form; ship as uint16 view + marker
+    if arr.dtype == jnp.bfloat16:
+        return {b"__bf16__": True, b"data": arr.view(np.uint16).tobytes(),
+                b"shape": list(arr.shape)}
+    return {b"__nd__": True, b"data": arr.tobytes(),
+            b"dtype": arr.dtype.str, b"shape": list(arr.shape)}
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and b"__bf16__" in obj:
+        flat = np.frombuffer(obj[b"data"], np.uint16).reshape(obj[b"shape"])
+        return jnp.asarray(flat.view(jnp.bfloat16))
+    if isinstance(obj, dict) and b"__nd__" in obj:
+        flat = np.frombuffer(obj[b"data"], np.dtype(obj[b"dtype"]))
+        return jnp.asarray(flat.reshape(obj[b"shape"]))
+    return obj
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree, *, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = msgpack.packb([_encode(l) for l in leaves], use_bin_type=True)
+    path = os.path.join(directory, f"ckpt_{step}.msgpack")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+    steps = sorted(_all_steps(directory))
+    for s in steps[:-keep]:
+        os.remove(os.path.join(directory, f"ckpt_{s}.msgpack"))
+    return path
+
+
+def _all_steps(directory: str):
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m:
+            out.append(int(m.group(1)))
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = _all_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template: PyTree,
+                       step: Optional[int] = None) -> PyTree:
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    with open(os.path.join(directory, f"ckpt_{step}.msgpack"), "rb") as f:
+        raw = msgpack.unpackb(f.read(), raw=True)
+    leaves = [_decode(o) for o in raw]
+    _, treedef = jax.tree_util.tree_flatten(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

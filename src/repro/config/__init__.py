@@ -1,0 +1,22 @@
+from repro.config.base import (
+    Config,
+    ModelConfig,
+    MoEConfig,
+    MLAConfig,
+    RecurrentConfig,
+    QuantConfig,
+    ChannelConfig,
+    EnergyConfig,
+    ConvergenceConfig,
+    FLConfig,
+    MeshConfig,
+    TrainConfig,
+    apply_overrides,
+    config_to_dict,
+)
+
+__all__ = [
+    "Config", "ModelConfig", "MoEConfig", "MLAConfig", "RecurrentConfig",
+    "QuantConfig", "ChannelConfig", "EnergyConfig", "ConvergenceConfig",
+    "FLConfig", "MeshConfig", "TrainConfig", "apply_overrides", "config_to_dict",
+]

@@ -1,0 +1,118 @@
+"""Architecture config registry.
+
+``get_config("qwen2.5-14b")`` returns the full assigned config;
+``reduced(cfg)`` returns the CPU-smoke-test variant (<=2 layers, d_model<=512,
+<=4 experts) of the same family; ``for_shape(cfg, shape)`` adapts a config to
+one of the four assigned input shapes (e.g. enables sliding-window attention
+for full-attention archs on ``long_500k``).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import replace
+from typing import Dict, List
+
+from repro.config import Config, MoEConfig
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+# registry name -> module (module-level CONFIG)
+_ARCHS: Dict[str, str] = {
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "yi-9b": "repro.configs.yi_9b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "whisper-base": "repro.configs.whisper_base",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "mnist_cnn": "repro.configs.mnist_cnn",
+}
+
+ASSIGNED_ARCHS: List[str] = [a for a in _ARCHS if a != "mnist_cnn"]
+
+# The sliding window applied to full-attention archs for long_500k (DESIGN.md).
+LONG_CONTEXT_WINDOW = 8192
+
+
+def list_archs() -> List[str]:
+    return list(_ARCHS)
+
+
+def get_config(name: str) -> Config:
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; valid: {sorted(_ARCHS)}")
+    return importlib.import_module(_ARCHS[name]).CONFIG
+
+
+def is_subquadratic(cfg: Config) -> bool:
+    """True if the arch handles 500k-token decode without a full-attention cache."""
+    m = cfg.model
+    return m.recurrent.kind in ("rwkv6", "rglru") or m.attention_window > 0
+
+
+def supports_shape(cfg: Config, shape: InputShape) -> bool:
+    m = cfg.model
+    if m.family == "cnn":
+        return shape.kind == "train"
+    if shape.name == "long_500k":
+        # whisper: 448-position decoder, 524k decode is architecturally meaningless
+        if m.is_encoder_decoder:
+            return False
+        return True  # all other archs: natively sub-quadratic or windowed variant
+    return True
+
+
+def for_shape(cfg: Config, shape: InputShape) -> Config:
+    """Adapt a config to an input shape (batch/seq + long-context windowing)."""
+    if not supports_shape(cfg, shape):
+        raise ValueError(f"{cfg.model.name} does not support {shape.name} (see DESIGN.md)")
+    m = cfg.model
+    if shape.name == "long_500k" and m.recurrent.kind == "none" and m.attention_window == 0:
+        # dense/moe/vlm full-attention archs run long_500k via sliding window
+        m = replace(m, attention_window=LONG_CONTEXT_WINDOW)
+    train = replace(cfg.train, global_batch=shape.global_batch, seq_len=shape.seq_len)
+    return replace(cfg, model=m, train=train)
+
+
+def reduced(cfg: Config) -> Config:
+    """Smoke-test variant: same family/block structure, tiny dims."""
+    m = cfg.model
+    d = min(m.d_model, 256)
+    heads = min(m.n_heads, 4)
+    kv = min(m.n_kv_heads, heads)
+    head_dim = d // heads
+    moe = m.moe
+    if moe.enabled:
+        moe = replace(moe, num_experts=min(moe.num_experts, 4),
+                      experts_per_token=min(moe.experts_per_token, 2),
+                      expert_d_ff=min(moe.expert_d_ff or m.d_ff, 128))
+    mla = m.mla
+    if mla.enabled:
+        mla = replace(mla, kv_lora_rank=32, q_lora_rank=48,
+                      qk_rope_head_dim=16, qk_nope_head_dim=32, v_head_dim=32)
+    rec = m.recurrent
+    if rec.d_rnn:
+        rec = replace(rec, d_rnn=d)
+    m = replace(
+        m,
+        name=m.name + "-reduced",
+        n_layers=min(m.n_layers, 2),
+        n_encoder_layers=min(m.n_encoder_layers, 2),
+        d_model=d,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=head_dim if m.family != "cnn" else 0,
+        d_ff=min(m.d_ff, 512),
+        vocab_size=min(m.vocab_size, 512),
+        encoder_seq_len=min(m.encoder_seq_len, 64),
+        local_window=min(m.local_window, 16),
+        attention_window=min(m.attention_window, 16) if m.attention_window else 0,
+        max_seq_len=min(m.max_seq_len, 2048),
+        moe=moe,
+        mla=mla,
+        recurrent=rec,
+    )
+    train = replace(cfg.train, global_batch=2, seq_len=32, steps=2, fsdp=False)
+    return replace(cfg, model=m, train=train)

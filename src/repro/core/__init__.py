@@ -1,0 +1,1 @@
+"""Paper core: quantization, FBL channel, energy, convergence, CMA-ES, aggregation, FL."""

@@ -1,0 +1,119 @@
+"""Error-aware update aggregation (paper §II-C, eq. 5/6).
+
+Pure forms (used by the MNIST simulator and tests):
+  naive_aggregate    — eq. 5: w + (1/K) Σ Δ_k (drops become silent zeros)
+  error_aware_aggregate — eq. 6: w + Σ α_k λ_k Δ_k / Σ α_k λ_k
+
+Collective forms (used inside the shard_map'd distributed FL round, one
+client cohort per ``data`` mesh shard):
+  psum_aggregate          — paper-faithful: f32 psum of dequantized weighted
+                            deltas (the BS does float math; wire = f32).
+  quantized_psum_aggregate — beyond-paper: the *integer codes* are what
+                            crosses the wire (int16/int32 psum), cutting
+                            collective bytes 2-4x. Weights fold in before
+                            quantization (unbiased, linear in expectation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import QuantConfig
+from repro.core import quantization as quant
+
+PyTree = Any
+EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# pure (simulator) forms: updates stacked on a leading K axis
+# ---------------------------------------------------------------------------
+
+def naive_aggregate(w: PyTree, deltas: PyTree, lambdas: jnp.ndarray) -> PyTree:
+    """eq. 5 with drops zeroed: w + (1/K) Σ λ_k Δ_k."""
+    K = lambdas.shape[0]
+
+    def agg(wl, dl):
+        lam = lambdas.reshape((K,) + (1,) * (dl.ndim - 1))
+        return wl + jnp.sum(dl * lam, axis=0).astype(wl.dtype) / K
+
+    return jax.tree_util.tree_map(agg, w, deltas)
+
+
+def error_aware_aggregate(w: PyTree, deltas: PyTree, alphas: jnp.ndarray,
+                          lambdas: jnp.ndarray) -> PyTree:
+    """eq. 6: surviving updates renormalized by the surviving data mass."""
+    K = lambdas.shape[0]
+    wts = alphas * lambdas
+    den = jnp.maximum(jnp.sum(wts), EPS)
+
+    def agg(wl, dl):
+        ww = wts.reshape((K,) + (1,) * (dl.ndim - 1))
+        return wl + (jnp.sum(dl * ww, axis=0) / den).astype(wl.dtype)
+
+    return jax.tree_util.tree_map(agg, w, deltas)
+
+
+# ---------------------------------------------------------------------------
+# collective forms (inside shard_map, manual over `axes`)
+# ---------------------------------------------------------------------------
+
+def _int_container(bits: int, num_shards: int):
+    """Smallest signed int dtype holding Σ over shards of ±2^(bits-1) codes."""
+    need = bits - 1 + math.ceil(math.log2(max(num_shards, 2))) + 1
+    if need <= 7:
+        return jnp.int8
+    if need <= 15:
+        return jnp.int16
+    return jnp.int32
+
+
+def psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
+                   qcfg: QuantConfig, key, axes: Sequence[str]) -> PyTree:
+    """Paper-faithful collective: quantize-dequantize locally (the uplink
+    payload is n-bit), then float all-reduce of the weighted survivors."""
+    axes = tuple(axes)
+    if qcfg.enabled and qcfg.quantize_uplink:
+        delta = quant.quantize_tree(delta, key, qcfg)
+    w = (alpha * lam).astype(jnp.float32)
+    den = jax.lax.psum(w, axes)
+
+    def agg(dl):
+        num = jax.lax.psum(dl.astype(jnp.float32) * w, axes)
+        return num / jnp.maximum(den, EPS)
+
+    return jax.tree_util.tree_map(agg, delta)
+
+
+def quantized_psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
+                             qcfg: QuantConfig, key, axes: Sequence[str],
+                             num_shards: int) -> PyTree:
+    """Beyond-paper collective: int codes cross the wire.
+
+    codes_k = Q(α_k λ_k Δ_k · S) with S = num_shards (keeps magnitudes in the
+    quantizer's [-1,1] range when α ~ 1/S); all-reduce the ints exactly, then
+    dequantize once and renormalize by psum(α λ)·S.
+    """
+    axes = tuple(axes)
+    if not qcfg.enabled:
+        return psum_aggregate(delta, alpha, lam, qcfg, key, axes)
+    container = _int_container(qcfg.bits, num_shards)
+    scale = float(num_shards)
+    w = (alpha * lam).astype(jnp.float32)
+    den = jax.lax.psum(w, axes)
+
+    leaves, treedef = jax.tree_util.tree_flatten(delta)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        codes = quant.quantize_codes(leaf.astype(jnp.float32) * (w * scale), k,
+                                     qcfg.bits, clip=qcfg.clip,
+                                     stochastic=qcfg.stochastic)
+        total = jax.lax.psum(codes.astype(container), axes)
+        deq = quant.dequantize_codes(total.astype(jnp.int32), qcfg.bits,
+                                     clip=qcfg.clip)
+        out.append(deq / (jnp.maximum(den, EPS) * scale))
+    return jax.tree_util.tree_unflatten(treedef, out)

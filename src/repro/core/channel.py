@@ -1,0 +1,72 @@
+"""Finite-blocklength uplink channel (paper §II-D2).
+
+Achievable rate under blocklength M and target error probability q
+(Polyanskiy et al. 2010, eq. 8 of the paper):
+
+    r(ρ|h|², M, q) ≈ C(ρ|h|²) − sqrt(V(ρ|h|²)/M) · Q⁻¹(q)
+    C(x) = log2(1+x)
+    V(x) = (1 − (1+x)⁻²) · (log2 e)²
+
+The channel is quasi-static Rayleigh: |h|² ~ Exp(1/scale), constant over the
+M-symbol block; full CSI, rate adaptation, so q is a *chosen* operating point
+(the packet drop probability in the aggregation model).
+
+Everything is jnp so the rate/time/energy pipeline can sit inside jit (the
+CMA-ES objective evaluates it thousands of times).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ChannelConfig
+
+LOG2E = 1.4426950408889634
+
+
+def qfunc_inv(q: jax.Array) -> jax.Array:
+    """Inverse Gaussian Q-function via erfinv: Q⁻¹(q) = sqrt(2)·erfinv(1−2q)."""
+    q = jnp.asarray(q, jnp.float32)
+    return jnp.sqrt(2.0) * jax.scipy.special.erfinv(1.0 - 2.0 * q)
+
+
+def capacity(snr: jax.Array) -> jax.Array:
+    return jnp.log2(1.0 + snr)
+
+
+def dispersion(snr: jax.Array) -> jax.Array:
+    return (1.0 - (1.0 + snr) ** -2) * LOG2E ** 2
+
+
+def fbl_rate(snr: jax.Array, blocklength: jax.Array, error_prob: jax.Array) -> jax.Array:
+    """Achievable rate (bits/s/Hz), clipped at 0 (deep fades -> outage)."""
+    r = capacity(snr) - jnp.sqrt(dispersion(snr) / blocklength) * qfunc_inv(error_prob)
+    return jnp.maximum(r, 0.0)
+
+
+def snr(tx_power_w: jax.Array, channel_gain2: jax.Array, noise_w: jax.Array) -> jax.Array:
+    return tx_power_w * channel_gain2 / noise_w
+
+
+def sample_rayleigh_gain2(key: jax.Array, shape=(), scale: float = 1.0) -> jax.Array:
+    """|h|² for Rayleigh fading is exponential with mean ``scale``."""
+    return jax.random.exponential(key, shape) * scale
+
+
+def transmission_time_s(payload_bits: jax.Array, bandwidth_hz: jax.Array,
+                        rate_bps_hz: jax.Array) -> jax.Array:
+    """τ = d·n / (B·r); infinite (outage) when r == 0."""
+    rate = jnp.maximum(rate_bps_hz, 1e-12)
+    return payload_bits / (bandwidth_hz * rate)
+
+
+def expected_rate(cfg: ChannelConfig, key: jax.Array, num_samples: int = 4096) -> jax.Array:
+    """Monte-Carlo E[r] over Rayleigh fading at the configured operating point."""
+    g2 = sample_rayleigh_gain2(key, (num_samples,), cfg.rayleigh_scale)
+    r = fbl_rate(snr(cfg.tx_power_w, g2, cfg.noise_w), cfg.blocklength, cfg.error_prob)
+    return jnp.mean(r)
+
+
+def sample_packet_success(key: jax.Array, shape, error_prob: jax.Array) -> jax.Array:
+    """λ_k reliability factors: 1 w.p. 1-q, 0 w.p. q (paper §II-C1)."""
+    return (jax.random.uniform(key, shape) >= error_prob).astype(jnp.float32)

@@ -1,0 +1,75 @@
+"""Device energy and latency model (paper §II-D, eq. 7/9/10/14).
+
+Local training energy (eq. 7):   e^l(n) = β · C · f² · d_n · I,  d_n = d·n
+Uplink energy (eq. 9):           e^u(n) = τ · P_tx,  τ = d^u·n / (B·r)
+Expected total (eq. 14):         f_e(n) = (K·T/N) Σ_k (e^l + e^u)
+Round latency:                   τ_pr = (K/N) Σ_k (τ_k^u + MACs/C_comp · I)
+
+For the paper's QNN both d and MACs come from the closed-form counts; for the
+large assigned archs the launcher feeds compiled `cost_analysis()` FLOPs in.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config.base import ChannelConfig, EnergyConfig
+from repro.core import channel as ch
+
+
+def local_training_energy_j(cfg: EnergyConfig, num_params: int, bits: int,
+                            local_iters: int) -> jnp.ndarray:
+    """eq. 7 — energy of I local SGD iterations at n-bit precision."""
+    d_n = jnp.asarray(num_params, jnp.float32) * jnp.maximum(bits, 1)
+    return cfg.beta * cfg.cycles_per_bit * cfg.cpu_freq_hz ** 2 * d_n * local_iters
+
+
+def uplink_energy_j(ch_cfg: ChannelConfig, num_params: int, bits: int,
+                    rate_bps_hz: jnp.ndarray,
+                    tx_power_w: jnp.ndarray | None = None) -> jnp.ndarray:
+    """eq. 9 — transmission energy at the achieved FBL rate."""
+    p = ch_cfg.tx_power_w if tx_power_w is None else tx_power_w
+    payload = jnp.asarray(num_params, jnp.float32) * jnp.maximum(bits, 1)
+    tau = ch.transmission_time_s(payload, ch_cfg.bandwidth_hz, rate_bps_hz)
+    return tau * p
+
+
+def uplink_time_s(ch_cfg: ChannelConfig, num_params: int, bits: int,
+                  rate_bps_hz: jnp.ndarray) -> jnp.ndarray:
+    payload = jnp.asarray(num_params, jnp.float32) * jnp.maximum(bits, 1)
+    return ch.transmission_time_s(payload, ch_cfg.bandwidth_hz, rate_bps_hz)
+
+
+def compute_time_s(cfg: EnergyConfig, macs_per_iter: float, local_iters: int) -> float:
+    """MacOps/iteration / C_comp · I (paper §III)."""
+    return float(macs_per_iter) / cfg.compute_capacity_flops * local_iters
+
+
+def round_energy_j(e_cfg: EnergyConfig, ch_cfg: ChannelConfig, *, num_params: int,
+                   bits: int, local_iters: int, rate_bps_hz: jnp.ndarray,
+                   tx_power_w: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Per-device energy for one round: e^l + e^u."""
+    return (local_training_energy_j(e_cfg, num_params, bits, local_iters)
+            + uplink_energy_j(ch_cfg, num_params, bits, rate_bps_hz, tx_power_w))
+
+
+def expected_total_energy_j(e_cfg: EnergyConfig, ch_cfg: ChannelConfig, *,
+                            num_params: int, bits: int, local_iters: int,
+                            rates_per_device: jnp.ndarray, num_devices: int,
+                            devices_per_round: int, rounds: float,
+                            tx_power_w: jnp.ndarray | None = None) -> jnp.ndarray:
+    """eq. 14 — (K·T/N) Σ_k (e^l + e^u) with per-device achieved rates."""
+    e_l = local_training_energy_j(e_cfg, num_params, bits, local_iters)
+    e_u = uplink_energy_j(ch_cfg, num_params, bits, rates_per_device, tx_power_w)
+    per_device = e_l + e_u  # e_l broadcast over devices
+    k_over_n = devices_per_round / num_devices
+    return k_over_n * rounds * jnp.sum(per_device)
+
+
+def round_time_s(e_cfg: EnergyConfig, ch_cfg: ChannelConfig, *, num_params: int,
+                 bits: int, local_iters: int, macs_per_iter: float,
+                 rates_per_device: jnp.ndarray, num_devices: int,
+                 devices_per_round: int) -> jnp.ndarray:
+    """τ_pr = (K/N) Σ_k (τ_k^u + τ_k^comp) (paper §III)."""
+    tau_u = uplink_time_s(ch_cfg, num_params, bits, rates_per_device)
+    tau_c = compute_time_s(e_cfg, macs_per_iter, local_iters)
+    return devices_per_round / num_devices * jnp.sum(tau_u + tau_c)

@@ -1,0 +1,265 @@
+"""Federated training orchestration (paper Algorithm 1).
+
+Two runtimes share the same math:
+
+* ``FLSimulator`` — the paper's N=100-device MNIST setting: explicit client
+  sampling, I local QAT-SGD steps per client (eq. 4, STE fake-quant), uplink
+  delta quantization, Bernoulli packet drops, error-aware aggregation
+  (eq. 6), and per-round energy/latency from the §II-D model.  vmap over the
+  K selected clients; runs on one CPU device.
+
+* ``make_fl_train_step`` — the production mapping: one client cohort per
+  (``pod``, ``data``) mesh shard, model tensor-parallel over ``model``
+  (GSPMD auto axes inside ``shard_map``).  Each cohort runs I local SGD
+  steps, quantizes its delta, survives with prob. 1−q, and the cohorts
+  aggregate with a (optionally integer-payload) psum — the paper's uplink as
+  a collective.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import Config
+from repro.core import aggregation as agg
+from repro.core import channel as ch
+from repro.core import energy as energy_mod
+from repro.core import quantization as quant
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# paper-faithful simulator (MNIST QNN, N devices, K per round)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RoundTelemetry:
+    loss: float
+    accuracy: float
+    survivors: int
+    energy_j: float
+    tau_s: float
+
+
+class FLSimulator:
+    """Algorithm 1 over an explicit client store."""
+
+    def __init__(self, model, config: Config, client_store, *,
+                 macs_per_iter: Optional[float] = None):
+        self.model = model
+        self.config = config
+        self.store = client_store
+        self.alphas = jnp.asarray(client_store.client_weights(), jnp.float32)
+        self.num_params = int(sum(
+            np.prod(s.shape) for s in jax.tree_util.tree_leaves(
+                jax.eval_shape(model.init, jax.random.PRNGKey(0)))))
+        self.macs = macs_per_iter or config.energy.macs_per_iteration
+        self._round_fn = jax.jit(self._round)
+
+    # -- one client: I local steps of quantized SGD (eq. 4) -------------------
+
+    def _client_update(self, params, batches, rng):
+        fl = self.config.fl
+        qcfg = self.config.quant
+        eta = fl.learning_rate
+
+        def step(p, inp):
+            batch, key = inp
+            (loss, metrics), grads = jax.value_and_grad(
+                self.model.loss, has_aux=True)(p, batch, key)
+            p = jax.tree_util.tree_map(
+                lambda w, g: w - eta * g.astype(w.dtype), p, grads)
+            return p, (loss, metrics.get("accuracy", loss * 0))
+
+        keys = jax.random.split(rng, fl.local_iters)
+        p_final, (losses, accs) = jax.lax.scan(step, params, (batches, keys))
+        delta = jax.tree_util.tree_map(lambda a, b: a - b, p_final, params)
+        if qcfg.enabled and qcfg.quantize_uplink:
+            delta = quant.quantize_tree(delta, jax.random.fold_in(rng, 7), qcfg)
+        return delta, losses.mean(), accs.mean()
+
+    def _round(self, params, stacked_batches, client_alphas, rng):
+        """stacked_batches: leaves (K, I, B, ...); returns new params + stats."""
+        fl = self.config.fl
+        K = fl.devices_per_round
+        rngs = jax.random.split(rng, K + 1)
+        deltas, losses, accs = jax.vmap(
+            lambda b, r: self._client_update(params, b, r)
+        )(stacked_batches, rngs[:K])
+
+        lam = ch.sample_packet_success(rngs[K], (K,),
+                                       self.config.channel.error_prob)
+        if fl.error_aware:
+            new_params = agg.error_aware_aggregate(params, deltas,
+                                                   client_alphas, lam)
+        else:
+            new_params = agg.naive_aggregate(params, deltas, lam)
+        return new_params, losses.mean(), accs.mean(), lam.sum()
+
+    # -- public API -------------------------------------------------------------
+
+    def run_round(self, params, rng) -> Tuple[PyTree, RoundTelemetry]:
+        fl = self.config.fl
+        k_sel, k_data, k_run = jax.random.split(rng, 3)
+        clients = np.asarray(jax.random.choice(
+            k_sel, self.store.num_clients, (fl.devices_per_round,),
+            replace=False))
+        batch_size = self.config.train.global_batch
+        batches = []
+        for i, c in enumerate(clients):
+            ks = jax.random.split(jax.random.fold_in(k_data, i), fl.local_iters)
+            batches.append([self.store.client_batch(k, int(c), batch_size)
+                            for k in ks])
+        stacked = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves),
+            *[jax.tree_util.tree_map(lambda *l: jnp.stack(l), *bs)
+              for bs in batches])
+        client_alphas = self.alphas[jnp.asarray(clients)]
+
+        new_params, loss, acc, surv = self._round_fn(params, stacked,
+                                                     client_alphas, k_run)
+        e, tau = self.round_energy()
+        return new_params, RoundTelemetry(float(loss), float(acc),
+                                          int(surv), e, tau)
+
+    def round_energy(self) -> Tuple[float, float]:
+        """Expected per-round energy (J) and latency (s) at the operating point."""
+        cfg = self.config
+        bits = cfg.quant.bits if cfg.quant.enabled else 32
+        key = jax.random.PRNGKey(0)
+        g2 = ch.sample_rayleigh_gain2(key, (cfg.fl.num_devices,),
+                                      cfg.channel.rayleigh_scale)
+        rate = ch.fbl_rate(ch.snr(cfg.channel.tx_power_w, g2, cfg.channel.noise_w),
+                           cfg.channel.blocklength, cfg.channel.error_prob)
+        rate = jnp.maximum(rate, 1e-9)
+        e = energy_mod.expected_total_energy_j(
+            cfg.energy, cfg.channel, num_params=self.num_params, bits=bits,
+            local_iters=cfg.fl.local_iters, rates_per_device=rate,
+            num_devices=cfg.fl.num_devices,
+            devices_per_round=cfg.fl.devices_per_round, rounds=1.0)
+        tau = energy_mod.round_time_s(
+            cfg.energy, cfg.channel, num_params=self.num_params, bits=bits,
+            local_iters=cfg.fl.local_iters, macs_per_iter=self.macs,
+            rates_per_device=rate, num_devices=cfg.fl.num_devices,
+            devices_per_round=cfg.fl.devices_per_round)
+        return float(e), float(tau)
+
+    def train(self, params, rounds: int, rng, *, target_accuracy: float = 0.0,
+              eval_fn: Optional[Callable] = None, log_every: int = 0):
+        """Run rounds until ``rounds`` or target accuracy; returns history."""
+        history = []
+        for t in range(rounds):
+            rng, k = jax.random.split(rng)
+            params, tel = self.run_round(params, k)
+            metric = tel.accuracy
+            if eval_fn is not None:
+                metric = float(eval_fn(params))
+            history.append({"round": t, "loss": tel.loss, "accuracy": metric,
+                            "survivors": tel.survivors, "energy_j": tel.energy_j,
+                            "tau_s": tel.tau_s})
+            if log_every and t % log_every == 0:
+                print(f"  round {t:4d} loss={tel.loss:.4f} acc={metric:.4f} "
+                      f"survivors={tel.survivors}")
+            if target_accuracy and metric >= target_accuracy:
+                break
+        return params, history
+
+
+# ---------------------------------------------------------------------------
+# distributed FL round (shard_map over pod/data, auto over model)
+# ---------------------------------------------------------------------------
+
+def fl_data_axes(mesh, config: Optional[Config] = None) -> Tuple[str, ...]:
+    wanted = config.fl.cohort_axes if config is not None else ("pod", "data")
+    return tuple(a for a in wanted if a in mesh.shape)
+
+
+def make_fl_round(model, config: Config, mesh, *,
+                  collective: str = "paper") -> Optional[Callable]:
+    """Build the jit-able distributed FL round.
+
+    collective: "paper" (f32 wire, faithful) | "int" (integer-code wire,
+    beyond-paper optimization).
+
+    Returned fn: (params, batch, rng) -> (params, metrics).
+    ``batch`` leaves are (global_batch, ...) sharded over the data axes;
+    each shard is one client cohort.
+    """
+    fl = config.fl
+    qcfg = config.quant
+    axes = fl_data_axes(mesh, config)
+    if not axes:
+        # no cohort axis on this mesh (e.g. FSDP arch on a single pod):
+        # the FL round degenerates to standard training — caller falls back.
+        return None
+    num_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    eta = fl.learning_rate
+
+    def local_round(params, batch, rng):
+        # distinct PRNG stream per client cohort (shard of the data axes)
+        for a in axes:
+            rng = jax.random.fold_in(rng, jax.lax.axis_index(a))
+
+        # split the cohort batch into I microbatches (the ξ_k stream, eq. 4);
+        # the remainder (local_batch % I) is dropped
+        I = fl.local_iters
+        micro = jax.tree_util.tree_map(
+            lambda x: x[: (x.shape[0] // I) * I].reshape(
+                (I, x.shape[0] // I) + x.shape[1:]), batch)
+
+        def step(p, inp):
+            mb, key = inp
+            (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                p, mb, key)
+            p = jax.tree_util.tree_map(
+                lambda w, g: w - eta * g.astype(w.dtype), p, grads)
+            return p, loss
+
+        keys = jax.random.split(rng, I)
+        p_local, losses = jax.lax.scan(step, params, (micro, keys))
+        delta = jax.tree_util.tree_map(lambda a_, b_: (a_ - b_).astype(jnp.float32),
+                                       p_local, params)
+
+        lam = ch.sample_packet_success(jax.random.fold_in(rng, 11), (),
+                                       config.channel.error_prob)
+        alpha = jnp.float32(1.0 / num_shards)
+        k_q = jax.random.fold_in(rng, 13)
+        if collective == "int":
+            agg_delta = agg.quantized_psum_aggregate(delta, alpha, lam, qcfg,
+                                                     k_q, axes, num_shards)
+        else:
+            agg_delta = agg.psum_aggregate(delta, alpha, lam, qcfg, k_q, axes)
+
+        new_params = jax.tree_util.tree_map(
+            lambda w, d: w + d.astype(w.dtype), params, agg_delta)
+        mean_loss = jax.lax.pmean(losses.mean(), axes)
+        survivors = jax.lax.psum(lam, axes)
+        return new_params, {"loss": mean_loss, "survivors": survivors}
+
+    batch_spec = jax.sharding.PartitionSpec(axes if len(axes) > 1 else axes[0])
+    shmapped = jax.shard_map(
+        local_round, mesh=mesh,
+        in_specs=(jax.sharding.PartitionSpec(),
+                  jax.tree_util.tree_map(lambda _: batch_spec,
+                                         _batch_structure(model, config)),
+                  jax.sharding.PartitionSpec()),
+        out_specs=(jax.sharding.PartitionSpec(),
+                   {"loss": jax.sharding.PartitionSpec(),
+                    "survivors": jax.sharding.PartitionSpec()}),
+        check_vma=False, axis_names=set(axes))
+    return shmapped
+
+
+def _batch_structure(model, config: Config):
+    """A pytree with the same structure as a training batch (specs only)."""
+    if config.model.family == "cnn":
+        return {"images": 0, "labels": 0}
+    if config.model.is_encoder_decoder:
+        return {"tokens": 0, "labels": 0, "frames": 0}
+    return {"tokens": 0, "labels": 0}

@@ -1,0 +1,143 @@
+"""Stochastic fixed-point quantization (paper §II-A/B).
+
+The paper's three-step procedure:
+  1. scale up:   w_Q = clip(w, [-1,1]) * G,  G = 2^(n-1)
+  2. stochastic rounding:  floor(w_Q) w.p. 1-frac, floor(w_Q)+1 w.p. frac
+  3. scale down: w_r = R(w_Q) / G
+
+Stochastic rounding is unbiased: E[quantize(w)] == clip(w).  Integer codes live
+in [-G, G] (the top code G is reachable only by rounding up from values just
+below +1; we clip codes to G-1 ... actually to keep the signed n-bit range
+[-G, G-1] exactly representable we clip the *input* to (G-1)/G when strict
+n-bit containment is requested).
+
+All functions are pure jnp and jit/vmap/pjit friendly; ``use_pallas`` routes
+through the Pallas TPU kernel (validated in interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import QuantConfig
+
+PyTree = Any
+
+
+def _uniform_like(key: jax.Array, x: jax.Array) -> jax.Array:
+    return jax.random.uniform(key, x.shape, dtype=jnp.float32)
+
+
+def quantize_codes(x: jax.Array, key: jax.Array, bits: int, *,
+                   clip: float = 1.0, stochastic: bool = True) -> jax.Array:
+    """Return integer codes (int32) in [-(G), G] with G = 2^(bits-1)·clip⁻¹-scaled.
+
+    Codes are produced from x clipped to [-clip, clip]; the effective step is
+    clip / G so the dequantized grid spans the clip interval.
+    """
+    if bits <= 0:
+        raise ValueError("bits must be positive for quantization")
+    gain = (2.0 ** (bits - 1)) / clip
+    xq = jnp.clip(x.astype(jnp.float32), -clip, clip) * gain
+    if stochastic:
+        u = _uniform_like(key, xq)
+        codes = jnp.floor(xq + u)
+    else:
+        codes = jnp.round(xq)
+    # keep codes in the signed n-bit container range [-G, G-1]... the paper's
+    # [-1, 1) convention; +G (from x == +clip) saturates to G-1.
+    g = int(2 ** (bits - 1))
+    return jnp.clip(codes, -g, g - 1).astype(jnp.int32)
+
+
+def dequantize_codes(codes: jax.Array, bits: int, *, clip: float = 1.0,
+                     dtype=jnp.float32) -> jax.Array:
+    gain = (2.0 ** (bits - 1)) / clip
+    return (codes.astype(jnp.float32) / gain).astype(dtype)
+
+
+def quantize(x: jax.Array, key: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Quantize-dequantize (the value actually used for compute/transmission)."""
+    if not cfg.enabled:
+        return x
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.stochastic_quantize(x, key, cfg.bits, clip=cfg.clip,
+                                        stochastic=cfg.stochastic).astype(x.dtype)
+    codes = quantize_codes(x, key, cfg.bits, clip=cfg.clip, stochastic=cfg.stochastic)
+    return dequantize_codes(codes, cfg.bits, clip=cfg.clip, dtype=x.dtype)
+
+
+def quantize_tree(tree: PyTree, key: jax.Array, cfg: QuantConfig) -> PyTree:
+    """Quantize every array leaf with an independent PRNG stream."""
+    if not cfg.enabled:
+        return tree
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [quantize(leaf, k, cfg) for leaf, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_tree_codes(tree: PyTree, key: jax.Array, cfg: QuantConfig) -> PyTree:
+    """Integer codes for every leaf (what actually crosses the wire)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [quantize_codes(leaf, k, cfg.bits, clip=cfg.clip, stochastic=cfg.stochastic)
+           for leaf, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def dequantize_tree_codes(codes: PyTree, cfg: QuantConfig, dtype=jnp.float32) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda c: dequantize_codes(c, cfg.bits, clip=cfg.clip, dtype=dtype), codes)
+
+
+def quantization_variance_bound(bits: int, clip: float = 1.0) -> float:
+    """Per-element variance bound of stochastic rounding: step²/4, step = clip/2^(n-1)."""
+    step = clip / (2.0 ** (bits - 1))
+    return step * step / 4.0
+
+
+def payload_bits(num_params: int, bits: int) -> int:
+    """Uplink payload d_n^u = d^u * n (paper §II-D2)."""
+    return int(num_params) * int(bits)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator for quantization-aware local training (QNN).
+# Forward: quantized weights; backward: identity (plus clip mask).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def fake_quant_ste(x: jax.Array, key: jax.Array, bits: int, clip: float,
+                   stochastic: bool) -> jax.Array:
+    codes = quantize_codes(x, key, bits, clip=clip, stochastic=stochastic)
+    return dequantize_codes(codes, bits, clip=clip, dtype=x.dtype)
+
+
+def _fq_fwd(x, key, bits, clip, stochastic):
+    y = fake_quant_ste(x, key, bits, clip, stochastic)
+    return y, (x,)
+
+
+def _fq_bwd(bits, clip, stochastic, res, g):
+    (x,) = res
+    mask = (jnp.abs(x) <= clip).astype(g.dtype)  # clipped STE
+    return (g * mask, None)
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_params(params: PyTree, key: jax.Array, cfg: QuantConfig) -> PyTree:
+    """STE fake-quantization of a parameter tree (used inside the local loss)."""
+    if not (cfg.enabled and cfg.quantize_training):
+        return params
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    out = [fake_quant_ste(leaf, k, cfg.bits, cfg.clip, cfg.stochastic)
+           for leaf, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,1 @@
+"""Synthetic datasets + federated partitioning + batching pipeline."""

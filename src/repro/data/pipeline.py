@@ -1,0 +1,53 @@
+"""Per-client batching pipeline for the FL trainer.
+
+``ClientStore`` owns the global dataset and the federated partition;
+``client_batches`` yields minibatches for one client round (I local steps),
+sampling with replacement when the shard is smaller than I·batch — exactly
+the ξ_k minibatch stream of paper eq. 4.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import digit_dataset, partition_dirichlet, partition_iid
+
+
+@dataclass
+class ClientStore:
+    data: Dict[str, jnp.ndarray]
+    partitions: List[np.ndarray]
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.partitions)
+
+    def client_sizes(self) -> np.ndarray:
+        return np.array([len(p) for p in self.partitions], dtype=np.int64)
+
+    def client_weights(self) -> np.ndarray:
+        """α_k = |D_k| / D (paper eq. 6)."""
+        sizes = self.client_sizes().astype(np.float64)
+        return sizes / sizes.sum()
+
+    def client_batch(self, key, client: int, batch_size: int) -> Dict[str, jnp.ndarray]:
+        part = self.partitions[client]
+        idx = jax.random.choice(key, jnp.asarray(part), (batch_size,),
+                                replace=len(part) < batch_size)
+        return {k: v[idx] for k, v in self.data.items()}
+
+
+def make_federated_digits(key, *, num_samples: int = 20000, num_clients: int = 100,
+                          iid: bool = True, alpha: float = 0.5) -> ClientStore:
+    k_data, k_part = jax.random.split(key)
+    data = digit_dataset(k_data, num_samples)
+    if iid:
+        parts = partition_iid(k_part, num_samples, num_clients)
+    else:
+        parts = partition_dirichlet(k_part, np.asarray(data["labels"]),
+                                    num_clients, alpha)
+    return ClientStore(data, parts)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (quantize, qmatmul, aggregate) + ops + ref oracles."""

@@ -1,0 +1,45 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
+body executes as pure-Python-traced jnp, proving correctness; on a real TPU
+``interpret=False`` compiles to Mosaic.  ``_INTERPRET`` auto-detects.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import aggregate as _agg
+from repro.kernels import qmatmul as _qmm
+from repro.kernels import quantize as _quant
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def stochastic_quantize_codes(x: jax.Array, key: jax.Array, bits: int, *,
+                              clip: float = 1.0, stochastic: bool = True) -> jax.Array:
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    return _quant.stochastic_quantize_codes(x, u, bits, clip=clip,
+                                            stochastic=stochastic,
+                                            interpret=_INTERPRET)
+
+
+def stochastic_quantize(x: jax.Array, key: jax.Array, bits: int, *,
+                        clip: float = 1.0, stochastic: bool = True) -> jax.Array:
+    """Quantize-dequantize through the kernel pair (f32 out)."""
+    codes = stochastic_quantize_codes(x, key, bits, clip=clip, stochastic=stochastic)
+    return _quant.dequantize_codes(codes, bits, clip=clip, interpret=_INTERPRET)
+
+
+def dequantize_codes(codes: jax.Array, bits: int, *, clip: float = 1.0) -> jax.Array:
+    return _quant.dequantize_codes(codes, bits, clip=clip, interpret=_INTERPRET)
+
+
+def qmatmul(x_q: jax.Array, w_q: jax.Array, sx, sw) -> jax.Array:
+    return _qmm.qmatmul(x_q, w_q, jnp.float32(sx), jnp.float32(sw),
+                        interpret=_INTERPRET)
+
+
+def masked_aggregate(updates: jax.Array, weights: jax.Array,
+                     eps: float = 1e-12) -> jax.Array:
+    return _agg.masked_aggregate(updates, weights, eps=eps, interpret=_INTERPRET)

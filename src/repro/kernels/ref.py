@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stochastic_quantize_ref(x: jnp.ndarray, u: jnp.ndarray, bits: int, *,
+                            clip: float = 1.0, stochastic: bool = True) -> jnp.ndarray:
+    """Integer codes in [-G, G-1], G=2^(bits-1); u ~ U[0,1) same shape as x."""
+    gain = (2.0 ** (bits - 1)) / clip
+    xq = jnp.clip(x.astype(jnp.float32), -clip, clip) * gain
+    codes = jnp.floor(xq + u) if stochastic else jnp.round(xq)
+    g = int(2 ** (bits - 1))
+    return jnp.clip(codes, -g, g - 1).astype(jnp.int32)
+
+
+def dequantize_ref(codes: jnp.ndarray, bits: int, *, clip: float = 1.0) -> jnp.ndarray:
+    gain = (2.0 ** (bits - 1)) / clip
+    return codes.astype(jnp.float32) / gain
+
+
+def qmatmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray, sx: float, sw: float) -> jnp.ndarray:
+    """int8 (M,K) @ int8 (K,N) -> f32, dequantized by the per-tensor scales."""
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (sx * sw)
+
+
+def masked_aggregate_ref(updates: jnp.ndarray, weights: jnp.ndarray,
+                         eps: float = 1e-12) -> jnp.ndarray:
+    """Error-aware weighted aggregation (paper eq. 6).
+
+    updates: (K, D) client deltas; weights: (K,) = α_k·λ_k.
+    Returns Σ_k w_k·u_k / max(Σ_k w_k, eps).
+    """
+    num = jnp.einsum("k,kd->d", weights.astype(jnp.float32),
+                     updates.astype(jnp.float32))
+    den = jnp.maximum(jnp.sum(weights.astype(jnp.float32)), eps)
+    return num / den

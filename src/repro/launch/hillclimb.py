@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> confirm/refute.
+
+Three pairs (chosen from the baseline roofline table, EXPERIMENTS.md §Roofline):
+  A qwen2.5-14b x prefill_32k — worst roofline fraction (useful ratio 0.05:
+    40 heads don't divide model=16 -> attention replicated).
+  B yi-9b x train_4k        — most collective-bound (TP activation
+    all-reduces dominate).
+  C olmo-1b x train_4k      — most representative of the paper's technique
+    (fl_round; baseline = paper-faithful f32 uplink wire).
+
+Each iteration is (hypothesis, config/mesh/collective change, predicted
+delta); results land in experiments/dryrun/<tag>_<iter>.json and a summary
+table is printed for EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb [--pair A|B|C|all]
+"""
+
+import argparse
+import json
+
+import jax
+
+from repro.config.base import apply_overrides
+from repro.configs import get_config
+from repro.launch.dryrun import OUT_DIR, lower_combo
+
+
+def _mesh(shape, axes):
+    import math
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                         devices=jax.devices()[:n])
+
+
+EXPERIMENTS = {
+    "A": {
+        "arch": "qwen2.5-14b", "shape": "prefill_32k",
+        "iters": [
+            ("A1_headpad", "Megatron-style head padding 40->48 q / 8->16 kv "
+             "(hd=128 fixed) makes attention 16-way TP-shardable; predicted "
+             "compute term ~8x down (attn was replicated), +20% attn flops "
+             "padding waste; memory/device down (attn params shard)",
+             dict(overrides=("model.n_heads=48", "model.n_kv_heads=16",
+                             "model.head_dim=128"))),
+            ("A2_mesh32x8", "mesh aspect (32,8): 40 heads % 8 == 0 so NO "
+             "padding needed; attention 8-way sharded, batch 32-way; "
+             "predicted compute ~ between baseline and A1 (8-way not 16-way) "
+             "but zero padding waste",
+             dict(mesh_shape=(32, 8))),
+            ("A3_headpad_mesh32x8", "combine: padding is useless at 8-way "
+             "(already divisible) -> expect A3 == A2 modulo pad waste; "
+             "refutes 'padding always helps'",
+             dict(overrides=("model.n_heads=48", "model.n_kv_heads=16",
+                             "model.head_dim=128"), mesh_shape=(32, 8))),
+        ],
+    },
+    "B": {
+        "arch": "yi-9b", "shape": "train_4k",
+        "iters": [
+            ("B1_intwire", "int16 uplink wire (quantized psum): halves the "
+             "fl_allreduce bytes, but TP all-reduces dominate the collective "
+             "term -> predicted <2% total (expect REFUTED as a win)",
+             dict(collective="int")),
+            ("B2_dpmodel", "dp_over_model: replace 16-way TP with "
+             "within-cohort DP; kills tp_allreduce (~4.1s, tokens*d*L) and "
+             "adds cohort grad reduce (I*2*params*2B ~ 2.1s) + full-size fl "
+             "wire (~1.4s); predicted collective 4.2 -> ~3.5s",
+             dict(overrides=("train.dp_over_model=true",))),
+            ("B3_dpmodel_intwire", "B2 + int16 wire: fl_allreduce halves "
+             "-> predicted collective ~2.8s (33% below baseline)",
+             dict(overrides=("train.dp_over_model=true",), collective="int")),
+            ("B4_dpmodel_int_4bit", "4-bit codes: container is STILL int16 "
+             "at 16 cohorts (3+4+1=8 bits... <=15) -> predicted NO wire "
+             "change (deliberate refutation probe of 'fewer bits always "
+             "help')",
+             dict(overrides=("train.dp_over_model=true", "quant.bits=4"),
+                  collective="int")),
+        ],
+    },
+    "B5": {
+        "arch": "yi-9b", "shape": "train_4k",
+        "iters": [
+            ("B5_zero_cohort", "ZeRO-within-cohort (zero_over_model): params "
+             "stay 16-way model-sharded, per-layer all-gather inside local "
+             "steps (the model axis is pure DP within a cohort -> FL "
+             "semantics preserved); predicted collective ~= B3 + ~0.4s "
+             "(AG+RS ~ 3*params*2B/iter vs AR 2x) but memory back from "
+             "125.6 GiB to ~30 GiB",
+             dict(overrides=("train.zero_over_model=true",),
+                  collective="int")),
+        ],
+    },
+    "D": {
+        "arch": "nemotron-4-340b", "shape": "decode_32k",
+        "iters": [
+            ("D1_cache_seq_model", "decode_batch_2d (128 % 256 != 0 so the "
+             "implementation falls back to sharding the cache SEQ dim over "
+             "`model`, softmax stats reduce over it): the kv=8-replicated "
+             "cache (96L x 8loc x 32k x 8 x 192 x2 x2B = 154 GiB/dev) shards "
+             "16-way -> ~10 GiB; predicted peak 436 -> ~60-90 GiB (params + "
+             "f32 temps remain), memory term ~2-3x down",
+             dict(overrides=("train.decode_batch_2d=true",))),
+        ],
+    },
+    "C": {
+        "arch": "olmo-1b", "shape": "train_4k",
+        "iters": [
+            ("C1_intwire", "paper technique knob alone: int16 delta wire; "
+             "fl_allreduce is only ~2% of the collective term (TP dominates "
+             "at 1.2B params) -> predicted <2% (REFUTED as a win; documents "
+             "that the paper's uplink is not the datacenter bottleneck)",
+             dict(collective="int")),
+            ("C2_dpmodel", "dp_over_model (1.2B params replicate fine): "
+             "tp_allreduce (0.69s) -> cohort grad reduce ~0.28s + full fl "
+             "wire 0.19s; predicted collective 0.70 -> ~0.47s",
+             dict(overrides=("train.dp_over_model=true",))),
+            ("C3_dpmodel_intwire", "C2 + int16 wire: fl 0.19 -> 0.095; "
+             "predicted collective ~0.38s (45% below paper-faithful "
+             "baseline) with identical FL semantics (unbiased quantization)",
+             dict(overrides=("train.dp_over_model=true",), collective="int")),
+        ],
+    },
+}
+
+
+def run_pair(key: str) -> None:
+    exp = EXPERIMENTS[key]
+    arch, shape = exp["arch"], exp["shape"]
+    base_path = os.path.join(os.path.abspath(OUT_DIR),
+                             f"{arch}_{shape}_single.json")
+    with open(base_path) as f:
+        base = json.load(f)
+    rows = [("baseline", base["roofline"], base["memory"], base["step"])]
+
+    for name, hypothesis, change in exp["iters"]:
+        print(f"\n=== {key} / {name}")
+        print(f"hypothesis: {hypothesis}")
+        cfg = get_config(arch)
+        if change.get("overrides"):
+            cfg = apply_overrides(cfg, change["overrides"])
+        mesh = None
+        if change.get("mesh_shape"):
+            mesh = _mesh(change["mesh_shape"], ("data", "model"))
+        rec = lower_combo(arch, shape, False, config=cfg, mesh=mesh,
+                          collective=change.get("collective", "paper"))
+        out = os.path.join(os.path.abspath(OUT_DIR),
+                           f"{arch}_{shape}_single_{name}.json")
+        rec["hypothesis"] = hypothesis
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["status"] != "OK":
+            print(f"FAILED: {rec.get('error')}")
+            continue
+        rows.append((name, rec["roofline"], rec["memory"], rec["step"]))
+        _print_delta(rows[0], rows[-1])
+
+    print(f"\n### {key}: {arch} x {shape} summary")
+    print("| iter | compute s | memory s | collective s | dominant | mem GiB |")
+    print("|---|---|---|---|---|---|")
+    for name, t, mem, _ in rows:
+        print(f"| {name} | {t['compute_s']:.3e} | {t['memory_s']:.3e} | "
+              f"{t['collective_s']:.3e} | {t['dominant']} | "
+              f"{mem['peak_estimate_bytes']/2**30:.1f} |")
+
+
+def _print_delta(base_row, new_row):
+    _, bt, _, _ = base_row
+    name, nt, nm, _ = new_row
+    dom = bt["dominant"]
+    key = f"{dom}_s"
+    delta = (nt[key] - bt[key]) / bt[key]
+    print(f"result: dominant({dom}) {bt[key]:.3e} -> {nt[key]:.3e} "
+          f"({delta:+.1%}); new dominant={nt['dominant']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all",
+                    choices=["A", "B", "B5", "C", "D", "all"])
+    args = ap.parse_args()
+    keys = ["A", "B", "B5", "C", "D"] if args.pair == "all" else [args.pair]
+    for key in keys:
+        run_pair(key)
+
+
+if __name__ == "__main__":
+    main()

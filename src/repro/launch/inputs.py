@@ -1,0 +1,161 @@
+"""ShapeDtypeStruct input stand-ins + shardings per (arch, input shape, mesh).
+
+Nothing here allocates: the dry-run lowers against these structs.  The
+modality frontends are stubs per the assignment — whisper's ``frames`` are
+precomputed (B, 1500, d) embeddings; chameleon's VQ image codes arrive as
+ordinary token ids in the shared vocabulary.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import Config
+from repro.configs.shapes import InputShape
+
+PyTree = Any
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _batch_entry(mesh: Mesh, batch: int, *, include_model: bool = False):
+    axes = dp_axes(mesh)
+    if include_model and "model" in mesh.shape:
+        axes = axes + ("model",)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if batch % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    # try data-only
+    if "data" in mesh.shape and batch % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def _ns(mesh, *entries):
+    return NamedSharding(mesh, P(*entries))
+
+
+def _div(mesh: Mesh, axis: str, n: int) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+# ---------------------------------------------------------------------------
+# batches (train / prefill)
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(config: Config, shape: InputShape, mesh: Mesh
+                      ) -> Tuple[PyTree, PyTree]:
+    m = config.model
+    B, S = shape.global_batch, shape.seq_len
+    b = _batch_entry(mesh, B, include_model=config.train.dp_over_model)
+    if m.family == "cnn":
+        structs = {"images": jax.ShapeDtypeStruct((B, 28, 28, 1), jnp.float32),
+                   "labels": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        shardings = {"images": _ns(mesh, b, None, None, None),
+                     "labels": _ns(mesh, b)}
+        return structs, shardings
+    structs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    shardings = {"tokens": _ns(mesh, b, None), "labels": _ns(mesh, b, None)}
+    if m.is_encoder_decoder:
+        structs["frames"] = jax.ShapeDtypeStruct(
+            (B, m.encoder_seq_len, m.d_model), jnp.dtype(m.dtype))
+        shardings["frames"] = _ns(mesh, b, None, None)
+    return structs, shardings
+
+
+def prefill_specs(config: Config, shape: InputShape, mesh: Mesh):
+    m = config.model
+    B, S = shape.global_batch, shape.seq_len
+    b = _batch_entry(mesh, B)
+    tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    tok_sh = _ns(mesh, b, None)
+    if m.is_encoder_decoder:
+        frames = jax.ShapeDtypeStruct((B, m.encoder_seq_len, m.d_model),
+                                      jnp.dtype(m.dtype))
+        return (tokens, frames), (tok_sh, _ns(mesh, b, None, None))
+    return (tokens,), (tok_sh,)
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def decode_specs(model, config: Config, shape: InputShape, mesh: Mesh, *,
+                 batch_2d: bool | None = None):
+    """Returns ((cache_structs, token_struct), (cache_shardings, token_sharding)).
+
+    ``batch_2d`` (beyond-paper, §Perf): shard the decode batch over
+    (data, model) instead of data-only — the fix for GQA archs whose
+    kv-heads don't divide the model axis (their cache would otherwise
+    replicate across it, e.g. nemotron decode_32k at 436 GiB/dev).
+    """
+    m = config.model
+    if batch_2d is None:
+        batch_2d = config.train.decode_batch_2d
+    B, S = shape.global_batch, shape.seq_len
+    b = _batch_entry(mesh, B, include_model=batch_2d)
+    got_2d = batch_2d and isinstance(b, tuple) and "model" in b
+    # fallback when the batch doesn't divide data x model: shard the cache
+    # SEQUENCE dim over `model` instead (softmax stats reduce over it)
+    seq_over_model = batch_2d and not got_2d
+    cache_structs = jax.eval_shape(lambda: model.init_cache(B, S))
+    seq_parallel = b is None  # batch=1 (long_500k): shard the cache seq dim
+
+    kv_ok = _div(mesh, "model", m.n_kv_heads) and not got_2d and not seq_over_model
+    heads_ok = _div(mesh, "model", m.n_heads) and not got_2d
+
+    def spec_for(path, aval) -> NamedSharding:
+        names = [getattr(p, "key", getattr(p, "name", getattr(p, "idx", "")))
+                 for p in path]
+        names = [str(n) for n in names]
+        name = names[-1] if names else ""
+        nd = aval.ndim
+        if nd == 0 or name == "length":
+            return _ns(mesh)
+        if name == "kv_pos":  # (B, C)
+            if seq_parallel:
+                return _ns(mesh, None, "data" if _div(mesh, "data", aval.shape[1]) else None)
+            if seq_over_model and _div(mesh, "model", aval.shape[1]):
+                return _ns(mesh, b, "model")
+            return _ns(mesh, b, None)
+        # rwkv state leaves
+        if name == "S" and nd == 5:            # (L,B,H,hd,hd)
+            return _ns(mesh, None, b, "model" if heads_ok else None, None, None)
+        if name in ("x_tm", "x_cm") and nd == 3:  # (L,B,d)
+            return _ns(mesh, None, b,
+                       "model" if _div(mesh, "model", aval.shape[2]) else None)
+        # griffin per-layer recurrent state
+        if name == "h" and nd == 2:            # (B, d_rnn)
+            return _ns(mesh, b,
+                       "model" if _div(mesh, "model", aval.shape[1]) else None)
+        if name == "conv" and nd == 3:         # (B, w-1, d_rnn)
+            return _ns(mesh, b, None,
+                       "model" if _div(mesh, "model", aval.shape[2]) else None)
+        def seq_entry(size):
+            if seq_parallel and _div(mesh, "data", size):
+                return "data"
+            if seq_over_model and _div(mesh, "model", size):
+                return "model"
+            return None
+
+        if m.mla.enabled and nd == 4:          # latent (L,B,C,r+dr)
+            return _ns(mesh, None, b, seq_entry(aval.shape[2]), None)
+        if nd == 5:                            # (L,B,C,KV,hd)
+            return _ns(mesh, None, b, seq_entry(aval.shape[2]),
+                       "model" if kv_ok else None, None)
+        if nd == 4:                            # hybrid per-layer (B,C,KV,hd)
+            return _ns(mesh, b, seq_entry(aval.shape[1]),
+                       "model" if kv_ok else None, None)
+        return _ns(mesh, *([None] * nd))
+
+    cache_sh = jax.tree_util.tree_map_with_path(spec_for, cache_structs)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return (cache_structs, tokens), (cache_sh, _ns(mesh, b, None))

@@ -1,0 +1,103 @@
+"""Training driver: federated (the paper's Algorithm 1 as a collective) or
+standard data-parallel, on any mesh that fits the local device count.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
+      model.n_layers=2 model.d_model=256 model.vocab_size=512 \
+      train.global_batch=8 train.seq_len=64 train.steps=10 --devices 8
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (0 = real devices)")
+    ap.add_argument("--collective", default="paper", choices=["paper", "int"])
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("overrides", nargs="*")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import restore_checkpoint, save_checkpoint, latest_step
+    from repro.config.base import apply_overrides
+    from repro.configs import get_config
+    from repro.core import fl as fl_mod
+    from repro.data.synthetic import token_batch
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_debug_mesh, make_production_mesh
+    from repro.models import build_model
+    from repro.sharding import rules as rules_mod
+    from repro.sharding.context import use_sharding_rules
+
+    cfg = apply_overrides(get_config(args.arch), tuple(args.overrides))
+    model = build_model(cfg)
+    n_dev = len(jax.devices())
+    if n_dev >= 512:
+        mesh = make_production_mesh(multi_pod=True)
+    elif n_dev >= 256:
+        mesh = make_production_mesh()
+    elif n_dev >= 4:
+        mesh = make_debug_mesh(n_dev - n_dev % 4)
+    else:
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.model.name} "
+          f"({cfg.model.param_count()/1e6:.1f}M params)")
+
+    steps = args.steps or cfg.train.steps
+    step_fn, kind = steps_mod.make_train_step(model, cfg, mesh,
+                                              collective=args.collective)
+    print(f"step kind: {kind} (collective={args.collective}, "
+          f"quant bits={cfg.quant.bits}, q={cfg.channel.error_prob})")
+
+    p_shardings = rules_mod.param_shardings(model, cfg, mesh)
+    with jax.set_mesh(mesh), use_sharding_rules(mesh):
+        params = jax.jit(model.init, out_shardings=p_shardings)(
+            jax.random.PRNGKey(cfg.fl.seed))
+        start = 0
+        if args.checkpoint_dir and latest_step(args.checkpoint_dir) is not None:
+            start = latest_step(args.checkpoint_dir)
+            params = restore_checkpoint(args.checkpoint_dir, params)
+            print(f"restored checkpoint step {start}")
+        jitted = jax.jit(step_fn, in_shardings=(p_shardings, None, None),
+                         out_shardings=(p_shardings, None),
+                         donate_argnums=(0,))
+
+        key = jax.random.PRNGKey(cfg.fl.seed + 1)
+        t0 = time.time()
+        for step in range(start, steps):
+            key, k_data, k_step = jax.random.split(key, 3)
+            batch = token_batch(k_data, cfg.train.global_batch,
+                                cfg.train.seq_len, cfg.model.vocab_size)
+            params, metrics = jitted(params, batch, k_step)
+            if step % args.log_every == 0:
+                loss = float(metrics["loss"])
+                tok_s = (cfg.train.global_batch * cfg.train.seq_len
+                         * (step - start + 1)) / (time.time() - t0)
+                extra = ""
+                if "survivors" in metrics:
+                    extra = f" survivors={float(metrics['survivors']):.0f}"
+                print(f"step {step:5d} loss={loss:.4f} tok/s={tok_s:,.0f}{extra}")
+            if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
+                save_checkpoint(args.checkpoint_dir, step + 1, params)
+        print(f"done: {steps - start} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

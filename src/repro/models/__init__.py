@@ -1,0 +1,28 @@
+"""Model factory: ``build_model(config)`` returns the family-appropriate model.
+
+Every model exposes:
+  init(key) -> params
+  loss(params, batch, rng) -> (scalar, metrics)        [train_4k]
+and, for autoregressive families:
+  prefill(params, tokens[, frames]) -> (logits, cache) [prefill_32k]
+  decode_step(params, cache, tokens) -> (logits, cache) [decode_32k/long_500k]
+  init_cache(batch, seq_len) -> cache pytree
+"""
+from __future__ import annotations
+
+from repro.config.base import Config
+from repro.models.cnn import CNNModel
+from repro.models.transformer import LM
+from repro.models.whisper import WhisperModel
+
+
+def build_model(config: Config):
+    fam = config.model.family
+    if fam == "cnn":
+        return CNNModel(config)
+    if config.model.is_encoder_decoder:
+        return WhisperModel(config)
+    return LM(config)
+
+
+__all__ = ["build_model", "LM", "WhisperModel", "CNNModel"]

@@ -1,0 +1,133 @@
+"""GQA self-attention layer (projections + rope + cache) and cross-attention.
+
+Cache convention (per layer):
+  k, v : (B, C, KV, hd) bf16 — C = cache capacity (= seq_len for full
+         attention, = window for sliding-window / local attention).
+Positions are tracked *globally* by the model (``kv_pos`` (B, C) int32 with
+−1 marking invalid slots) because every layer shares them.
+
+Decode writes the current token's k/v at ``write_slot`` (= pos for full
+caches, pos % window for ring caches) and attends over cache ∪ {self}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import common
+
+
+def init_attention_params(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (d, H * hd), dtype=dtype),
+        "wk": common.dense_init(ks[1], (d, KV * hd), dtype=dtype),
+        "wv": common.dense_init(ks[2], (d, KV * hd), dtype=dtype),
+        "wo": common.dense_init(ks[3], (H * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, KV, hd),
+            v.reshape(B, S, KV, hd))
+
+
+def self_attention(params, x, positions, cfg: ModelConfig, *, window: int = 0,
+                   rope: bool = True) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence self-attention (train / prefill).
+
+    Returns (out, (k, v)) — k/v already rope'd, for cache construction.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    if rope:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    o = common.attention(q, k, v, positions, positions, causal=True, window=window)
+    out = o.reshape(B, S, -1) @ params["wo"]
+    return out, (k, v)
+
+
+def decode_self_attention(params, x, positions, cfg: ModelConfig, *,
+                          cache_k, cache_v, kv_pos, write_slot, window: int = 0,
+                          rope: bool = True):
+    """One-token decode. x: (B, 1, d); positions: (B, 1) absolute position.
+
+    cache_k/v: (B, C, KV, hd); kv_pos: (B, C); write_slot: (B,) int32 slot to
+    overwrite.  Returns (out, new_cache_k, new_cache_v) — the model updates
+    kv_pos once globally.
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, x, cfg)
+    if rope:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    # scatter the new kv into the cache (per-batch dynamic slot)
+    def write_one(ck, cv, kn, vn, slot):
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, kn, slot, axis=0)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, vn, slot, axis=0)
+        return ck, cv
+
+    new_k, new_v = jax.vmap(write_one)(cache_k, cache_v,
+                                       k.astype(cache_k.dtype),
+                                       v.astype(cache_v.dtype), write_slot)
+    new_kv_pos = jax.vmap(
+        lambda kp, slot, pos: jax.lax.dynamic_update_slice_in_dim(kp, pos, slot, 0)
+    )(kv_pos, write_slot, positions)
+
+    o = common.attention(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
+                         positions, new_kv_pos, causal=True, window=window)
+    out = o.reshape(B, 1, -1) @ params["wo"]
+    return out, new_k, new_v
+
+
+def init_cross_attention_params(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict:
+    return init_attention_params(key, cfg, dtype=dtype)
+
+
+def cross_attention(params, x, enc_k, enc_v, cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder->encoder attention (whisper). enc_k/v: (B, Se, KV, hd), prerope-free."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H = cfg.n_heads
+    q = x @ params["wq"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    q = q.reshape(B, S, H, hd)
+    Se = enc_k.shape[1]
+    q_pos = jnp.zeros((B, S), jnp.int32)
+    kv_pos = jnp.zeros((B, Se), jnp.int32)
+    o = common.attention(q, enc_k, enc_v, q_pos, kv_pos, causal=False, window=0)
+    return o.reshape(B, S, -1) @ params["wo"]
+
+
+def project_cross_kv(params, enc_out, cfg: ModelConfig):
+    """Precompute encoder k/v for all decode steps."""
+    B, Se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    KV = cfg.n_kv_heads
+    k = enc_out @ params["wk"]
+    v = enc_out @ params["wv"]
+    if cfg.qkv_bias:
+        k, v = k + params["bk"], v + params["bv"]
+    return k.reshape(B, Se, KV, hd), v.reshape(B, Se, KV, hd)

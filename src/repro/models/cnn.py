@@ -1,0 +1,95 @@
+"""The paper's QNN (§IV): 2 quantized conv + 2 quantized FC layers on 28x28.
+
+conv1: 32 @3x3 pad 1 stride 1 -> ReLU -> maxpool 2x2
+conv2: 64 @3x3 pad 1 stride 1 -> ReLU -> maxpool 2x2
+fc1:   3136 -> 128 -> ReLU
+fc2:   128 -> 10
+
+421,642 weights, 4,241,152 MACs/sample — asserted against the paper's counts
+in tests.  Quantization-aware training uses the STE fake-quant from
+``core.quantization`` (weights clipped to [-1, 1], stochastic rounding),
+exactly the paper's local-training procedure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import Config, QuantConfig
+from repro.core import quantization as quant
+from repro.models.transformer import _cross_entropy
+
+PyTree = Any
+
+IMAGE_SIZE = 28
+NUM_CLASSES = 10
+
+
+def count_weights() -> int:
+    conv1 = 32 * (3 * 3 * 1) + 32
+    conv2 = 64 * (3 * 3 * 32) + 64
+    fc1 = 3136 * 128 + 128
+    fc2 = 128 * 10 + 10
+    return conv1 + conv2 + fc1 + fc2
+
+
+def count_macs() -> int:
+    conv1 = 28 * 28 * 32 * (3 * 3 * 1)
+    conv2 = 14 * 14 * 64 * (3 * 3 * 32)
+    fc1 = 3136 * 128
+    fc2 = 128 * 10
+    return conv1 + conv2 + fc1 + fc2
+
+
+@dataclass
+class CNNModel:
+    config: Config
+
+    def init(self, key) -> PyTree:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        he = lambda k, shape, fan: jax.random.normal(k, shape) * (2.0 / fan) ** 0.5
+        return {
+            "conv1_w": he(k1, (3, 3, 1, 32), 9),
+            "conv1_b": jnp.zeros((32,)),
+            "conv2_w": he(k2, (3, 3, 32, 64), 9 * 32),
+            "conv2_b": jnp.zeros((64,)),
+            "fc1_w": he(k3, (3136, 128), 3136),
+            "fc1_b": jnp.zeros((128,)),
+            "fc2_w": he(k4, (128, 10), 128),
+            "fc2_b": jnp.zeros((10,)),
+        }
+
+    def forward(self, params, images: jnp.ndarray) -> jnp.ndarray:
+        """images: (B, 28, 28, 1) -> logits (B, 10)."""
+        x = images.astype(jnp.float32)
+        x = jax.lax.conv_general_dilated(
+            x, params["conv1_w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv1_b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = jax.lax.conv_general_dilated(
+            x, params["conv2_w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv2_b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+        return x @ params["fc2_w"] + params["fc2_b"]
+
+    def loss(self, params, batch: Dict[str, jnp.ndarray],
+             rng: Optional[jax.Array] = None, *, remat=None
+             ) -> Tuple[jnp.ndarray, Dict]:
+        """QAT loss: forward through STE-fake-quantized weights (paper eq. 4)."""
+        qcfg: QuantConfig = self.config.quant
+        p = params
+        if rng is not None and qcfg.enabled and qcfg.quantize_training:
+            p = quant.fake_quant_params(params, rng, qcfg)
+        logits = self.forward(p, batch["images"])
+        ce = _cross_entropy(logits[:, None, :], batch["labels"][:, None])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+        return ce, {"ce": ce, "accuracy": acc}

@@ -1,0 +1,202 @@
+"""Shared model building blocks: inits, norms, activations, rotary, attention.
+
+Everything is a pure function over explicit parameter pytrees (dicts); layer
+stacks are created with vmap'd inits and consumed with ``jax.lax.scan`` so the
+HLO stays small for the 96-layer archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32):
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        out = out * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        out = out * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def make_norm_params(key, cfg: ModelConfig, d: int):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "nonparametric_ln":
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(x, params, cfg: ModelConfig):
+    if cfg.norm_type == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    if cfg.norm_type == "nonparametric_ln":
+        return layernorm(x, None, None)
+    raise ValueError(cfg.norm_type)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return functools.partial(jax.nn.gelu, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    if name == "relu2":  # squared ReLU (Nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (chunked online-softmax "flash" in pure jnp)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, kv_pos, *, causal: bool, window: int) -> jnp.ndarray:
+    """(…, Sq, Skv) additive bias. kv_pos < 0 marks invalid cache slots."""
+    valid = kv_pos[..., None, :] >= 0
+    if causal:
+        valid &= kv_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        valid &= kv_pos[..., None, :] > q_pos[..., :, None] - window
+    return jnp.where(valid, 0.0, NEG_INF)
+
+
+def attention(q, k, v, q_pos, kv_pos, *, causal: bool = True, window: int = 0,
+              q_chunk: int = 512, kv_chunk: int = 1024) -> jnp.ndarray:
+    """GQA attention with chunked online softmax ("flash" in pure jnp).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); H % KV == 0.
+    q_pos: (B, Sq) int32; kv_pos: (B, Skv) int32 (−1 ⇒ invalid slot).
+    Returns (B, Sq, H, hd).  The chunked path never materializes the full
+    (Sq, Skv) score matrix — live memory is O(q_chunk·kv_chunk) per head.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    hd_v = v.shape[-1]
+    scale = hd ** -0.5
+    in_dtype = q.dtype
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, hd)
+    k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    if Sq * Skv <= q_chunk * kv_chunk * 4 or Sq < q_chunk:
+        # small / decode path: one einsum, full bias
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k32)
+        s = s + _mask_bias(q_pos, kv_pos, causal=causal, window=window)[:, None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, v32)
+        return o.reshape(B, Sq, H, hd_v).astype(in_dtype)
+
+    # ---- chunked path -----------------------------------------------------
+    pad_q = (q_chunk - Sq % q_chunk) % q_chunk
+    pad_k = (kv_chunk - Skv % kv_chunk) % kv_chunk
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-2)
+    if pad_k:
+        k32 = jnp.pad(k32, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v32 = jnp.pad(v32, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+    Sqp, Skvp = Sq + pad_q, Skv + pad_k
+    nq, nk = Sqp // q_chunk, Skvp // kv_chunk
+
+    # (nq, B, qc, KV, G, hd) / (nk, B, kc, KV, hd)
+    q_blocks = jnp.moveaxis(qg.reshape(B, nq, q_chunk, KV, G, hd), 1, 0)
+    qp_blocks = jnp.moveaxis(q_pos.reshape(B, nq, q_chunk), 1, 0)
+    k_blocks = jnp.moveaxis(k32.reshape(B, nk, kv_chunk, KV, hd), 1, 0)
+    v_blocks = jnp.moveaxis(v32.reshape(B, nk, kv_chunk, KV, hd_v), 1, 0)
+    kp_blocks = jnp.moveaxis(kv_pos.reshape(B, nk, kv_chunk), 1, 0)
+
+    def per_q_chunk(args):
+        qb, qpb = args  # (B, qc, KV, G, hd), (B, qc)
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            kb, vb, kpb = blk
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb)
+            s = s + _mask_bias(qpb, kpb, causal=causal, window=window)[:, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vb)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (k_blocks, v_blocks, kp_blocks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,G,qc,hd)
+        return jnp.moveaxis(out, 3, 1)                        # (B,qc,KV,G,hd)
+
+    outs = jax.lax.map(per_q_chunk, (q_blocks, qp_blocks))    # (nq,B,qc,KV,G,hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sqp, KV, G, hd_v)[:, :Sq]
+    return out.reshape(B, Sq, H, hd_v).astype(in_dtype)

@@ -1,0 +1,86 @@
+"""Griffin / RecurrentGemma blocks (arXiv:2402.19427): RG-LRU recurrent block
+mixed 2:1 with local (sliding-window, MQA) attention.
+
+RG-LRU (post-conv input x_t, hidden h_t ∈ R^{d_rnn}):
+    r_t = σ(W_a x_t + b_a)            recurrence gate
+    i_t = σ(W_i x_t + b_i)            input gate
+    a_t = exp(−c·softplus(Λ)·r_t),    c = 8
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Decode state per recurrent layer: {"h": (B, d_rnn) f32,
+                                   "conv": (B, width−1, d_rnn)}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import common
+
+LRU_C = 8.0
+
+
+def init_recurrent_params(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    dr = cfg.recurrent.d_rnn or d
+    w = cfg.recurrent.conv1d_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": common.dense_init(ks[0], (d, dr), dtype=dtype),
+        "w_gate": common.dense_init(ks[1], (d, dr), dtype=dtype),
+        "conv_w": common.dense_init(ks[2], (w, dr), dtype=dtype) * 0.1,
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_a": common.dense_init(ks[3], (dr, dr), dtype=dtype),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_i": common.dense_init(ks[4], (dr, dr), dtype=dtype),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "lam": jnp.full((dr,), 2.0, jnp.float32),   # softplus(2) ~ stable decay
+        "w_out": common.dense_init(ks[5], (dr, d), dtype=dtype),
+    }
+
+
+def _causal_conv(u, conv_w, conv_b, u_prev):
+    """Depthwise causal conv1d. u: (B,S,dr); u_prev: (B,width−1,dr) history."""
+    w = conv_w.shape[0]
+    ext = jnp.concatenate([u_prev.astype(u.dtype), u], axis=1)    # (B, S+w-1, dr)
+    out = sum(ext[:, i : i + u.shape[1], :] * conv_w[i] for i in range(w))
+    return out + conv_b, ext[:, -(w - 1):, :]
+
+
+def _rg_lru(params, x, h0):
+    """x: (B,S,dr); h0: (B,dr) f32. Returns (y (B,S,dr), h_final)."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(x32 @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    log_a = -LRU_C * jax.nn.softplus(params["lam"]) * r           # (B,S,dr)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x32)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h_new = a_t * h + g_t
+        return h_new, h_new
+
+    h_final, ys = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                          jnp.moveaxis(gated, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final
+
+
+def recurrent_block(params, x, state, cfg: ModelConfig):
+    """Griffin recurrent block. x: (B,S,d). Returns (out, new_state)."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u = x @ params["w_x"]
+    u, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"], state["conv"])
+    y, new_h = _rg_lru(params, u, state["h"])
+    out = (y * gate) @ params["w_out"]
+    return out, {"h": new_h, "conv": new_conv}
+
+
+def init_recurrent_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    dr = cfg.recurrent.d_rnn or cfg.d_model
+    w = cfg.recurrent.conv1d_width
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, w - 1, dr), dtype)}

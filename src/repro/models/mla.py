@@ -1,0 +1,115 @@
+"""Multi-head latent attention (DeepSeek-V3, arXiv:2412.19437).
+
+Prefill/train: the latent KV is up-projected and attention runs normally.
+Decode: the cache stores the *compressed* latent (kv_lora_rank) + the shared
+rope key (qk_rope_head_dim) per token — the MLA memory win — and the
+up-projections are **absorbed** into the query/output paths so the per-step
+cost is O(S · (r + d_rope)) per head instead of reconstructing full K/V.
+
+Cache per layer: latent (B, C, r + d_rope) bf16.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import common
+
+
+def init_mla_params(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dq = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": common.dense_init(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "w_uq": common.dense_init(ks[1], (m.q_lora_rank, H * dq), dtype=dtype),
+        "w_dkv": common.dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype=dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+        "w_uk": common.dense_init(ks[3], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype=dtype),
+        "w_uv": common.dense_init(ks[4], (m.kv_lora_rank, H * m.v_head_dim), dtype=dtype),
+        "wo": common.dense_init(ks[5], (H * m.v_head_dim, d), dtype=dtype),
+    }
+
+
+def _queries(params, x, positions, cfg: ModelConfig):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dq = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ql = common.rmsnorm(x @ params["w_dq"], params["q_norm"])
+    q = (ql @ params["w_uq"]).reshape(B, S, H, dq)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = common.apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(params, x, positions, cfg: ModelConfig):
+    """Compressed kv: (latent (B,S,r), k_rope (B,S,1,d_rope))."""
+    m = cfg.mla
+    dkv = x @ params["w_dkv"]
+    latent = common.rmsnorm(dkv[..., : m.kv_lora_rank], params["kv_norm"])
+    k_rope = dkv[..., m.kv_lora_rank:][:, :, None, :]          # one shared head
+    k_rope = common.apply_rope(k_rope, positions, cfg.rope_theta)
+    return latent, k_rope
+
+
+def mla_attention(params, x, positions, cfg: ModelConfig, *, window: int = 0
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence MLA (train / prefill). Returns (out, cache_latent)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _queries(params, x, positions, cfg)
+    latent, k_rope = _latent(params, x, positions, cfg)
+
+    k_nope = (latent @ params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (latent @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    o = common.attention(q, k, v, positions, positions, causal=True, window=window)
+    out = o.reshape(B, S, -1) @ params["wo"]
+    cache = jnp.concatenate([latent, k_rope[:, :, 0, :]], -1)   # (B,S,r+d_rope)
+    return out, cache
+
+
+def mla_decode(params, x, positions, cfg: ModelConfig, *, cache, kv_pos,
+               write_slot, window: int = 0):
+    """Absorbed one-token decode. cache: (B, C, r + d_rope)."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    r = m.kv_lora_rank
+    q_nope, q_rope = _queries(params, x, positions, cfg)        # (B,1,H,·)
+    latent_new, k_rope_new = _latent(params, x, positions, cfg)
+    entry = jnp.concatenate([latent_new, k_rope_new[:, :, 0, :]], -1)
+
+    new_cache = jax.vmap(
+        lambda c, e, slot: jax.lax.dynamic_update_slice_in_dim(c, e, slot, 0)
+    )(cache, entry.astype(cache.dtype), write_slot)
+    new_kv_pos = jax.vmap(
+        lambda kp, slot, pos: jax.lax.dynamic_update_slice_in_dim(kp, pos, slot, 0)
+    )(kv_pos, write_slot, positions)
+
+    lat = new_cache[..., :r].astype(jnp.float32)                # (B,C,r)
+    kr = new_cache[..., r:].astype(jnp.float32)                 # (B,C,d_rope)
+
+    # absorb W_uk into q:  scores_nope[h,s] = (q_nope[h] @ W_uk[h].T) . latent[s]
+    w_uk = params["w_uk"].reshape(r, H, m.qk_nope_head_dim).astype(jnp.float32)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_uk)
+    scores = jnp.einsum("bqhr,bsr->bhqs", q_lat, lat)
+    scores += jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), kr)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    bias = common._mask_bias(positions, new_kv_pos, causal=True, window=window)
+    p = jax.nn.softmax(scores * scale + bias[:, None], axis=-1)  # (B,H,1,C)
+
+    # absorbed output: (p @ latent) @ W_uv, then wo
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", p, lat)
+    w_uv = params["w_uv"].reshape(r, H, m.v_head_dim).astype(jnp.float32)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)
+    out = o.reshape(B, 1, -1).astype(x.dtype) @ params["wo"]
+    return out, new_cache, new_kv_pos

@@ -1,0 +1,124 @@
+"""MLP blocks: dense (gated / plain) and capacity-based mixture-of-experts.
+
+The MoE uses the GShard/MaxText dense-dispatch formulation: tokens are split
+into groups, routed top-k with a per-group expert capacity, and moved through
+(dispatch → expert FFN → combine) einsums.  The expert dimension shards over
+the ``model`` mesh axis (expert parallelism); groups shard over ``data``.
+Dropped tokens (over capacity) fall back to the residual path, as usual.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import common
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp_params(key, cfg: ModelConfig, *, d_ff: int = 0, dtype=jnp.float32) -> Dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": common.dense_init(ks[0], (d, ff), dtype=dtype),
+         "w_down": common.dense_init(ks[1], (ff, d), dtype=dtype)}
+    if cfg.gated_mlp:
+        p["w_gate"] = common.dense_init(ks[2], (d, ff), dtype=dtype)
+    return p
+
+
+def mlp(params, x, cfg: ModelConfig) -> jnp.ndarray:
+    act = common.activation_fn(cfg.activation)
+    up = x @ params["w_up"]
+    if cfg.gated_mlp:
+        up = act(x @ params["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts
+# ---------------------------------------------------------------------------
+
+MOE_GROUP_SIZE = 1024
+MOE_CAPACITY_FACTOR = 1.25
+
+
+def init_moe_params(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    m = cfg.moe
+    ff = m.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": common.dense_init(ks[0], (d, m.num_experts), dtype=jnp.float32),
+        "w_gate": common.dense_init(ks[1], (m.num_experts, d, ff), dtype=dtype),
+        "w_up": common.dense_init(ks[2], (m.num_experts, d, ff), dtype=dtype),
+        "w_down": common.dense_init(ks[3], (m.num_experts, ff, d), dtype=dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp_params(
+            ks[4], cfg, d_ff=ff * m.num_shared_experts, dtype=dtype)
+    return p
+
+
+def moe_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    cap = int(math.ceil(tokens_per_group * m.experts_per_token
+                        / m.num_experts * MOE_CAPACITY_FACTOR))
+    return max(cap, 4)
+
+
+def moe(params, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss).  Capacity-based top-k routing."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    gs = min(MOE_GROUP_SIZE, T)
+    assert T % gs == 0, (T, gs)
+    G = T // gs
+    E, K = m.num_experts, m.experts_per_token
+    C = moe_capacity(gs, cfg)
+
+    xf = x.reshape(G, gs, d)
+    logits = (xf.astype(jnp.float32) @ params["router"])          # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    top_p, top_e = jax.lax.top_k(probs, K)                         # (G, gs, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    sel = jax.nn.one_hot(top_e, E, dtype=jnp.float32)              # (G, gs, K, E)
+    sel_flat = sel.reshape(G, gs * K, E)
+    pos = jnp.cumsum(sel_flat, axis=1) - 1.0                       # (G, gs*K, E)
+    pos = (pos * sel_flat).sum(-1).reshape(G, gs, K)               # (G, gs, K)
+    keep = pos < C
+    gate = top_p * keep
+
+    # dispatch/combine tensors (G, gs, E, C)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C).astype(jnp.int32), C + 1,
+                            dtype=jnp.float32)[..., :C]            # (G,gs,K,C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", sel, pos_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", sel, pos_oh, gate)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xf)  # (G,E,C,d)
+    act = common.activation_fn(cfg.activation)
+    h = act(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])           # (G,E,C,d)
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+
+    if m.num_shared_experts:
+        out = out + mlp(params["shared"], xf, cfg)
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * P_e
+    frac_tokens = sel[..., 0, :].mean(axis=(0, 1)) if K == 1 else \
+        sel.sum(axis=2).mean(axis=(0, 1)) / K                      # (E,)
+    frac_probs = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs) * m.router_aux_loss_coef
+    return out.reshape(B, S, d), aux

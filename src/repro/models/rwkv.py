@@ -1,0 +1,148 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free, matrix-valued
+state with data-dependent decay.
+
+Time-mix recurrence per head (k,v,r,w,u ∈ R^hd, state S ∈ R^{hd×hd}):
+    S_t = diag(w_t)·S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u)·k_tᵀ v_t)
+with data-dependent decay w_t = exp(−exp(w0 + lora_w(x̄_w))) and the five
+ddlerp token-shift mixes (r,k,v,w,g) produced by a shared low-rank MLP.
+
+Projections for the whole sequence are computed in parallel; only the O(1)
+state update runs under ``lax.scan`` — so decode is a single scan step.
+
+Decode state per layer: {"S": (B,H,hd,hd) f32, "x_tm": (B,d), "x_cm": (B,d)}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import common
+
+DDLERP_RANK = 32
+DECAY_RANK = 64
+MIXES = 5  # r, k, v, w, g
+
+
+def init_rwkv_params(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    ff = cfg.d_ff
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 16)
+    return {
+        # time-mix
+        "mu_base": jnp.full((MIXES, d), 0.5, jnp.float32),
+        "ddlerp_A": common.dense_init(ks[0], (d, MIXES * DDLERP_RANK), dtype=dtype),
+        "ddlerp_B": common.dense_init(ks[1], (MIXES, DDLERP_RANK, d), dtype=dtype),
+        "w_r": common.dense_init(ks[2], (d, d), dtype=dtype),
+        "w_k": common.dense_init(ks[3], (d, d), dtype=dtype),
+        "w_v": common.dense_init(ks[4], (d, d), dtype=dtype),
+        "w_g": common.dense_init(ks[5], (d, d), dtype=dtype),
+        "w_o": common.dense_init(ks[6], (d, d), dtype=dtype),
+        "decay_base": jnp.full((d,), -4.0, jnp.float32),
+        "decay_A": common.dense_init(ks[7], (d, DECAY_RANK), dtype=dtype),
+        "decay_B": common.dense_init(ks[8], (DECAY_RANK, d), dtype=dtype),
+        "bonus_u": jnp.zeros((H, hd), jnp.float32),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),  # per-head groupnorm scale
+        # channel-mix
+        "cm_mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_wk": common.dense_init(ks[9], (d, ff), dtype=dtype),
+        "cm_wv": common.dense_init(ks[10], (ff, d), dtype=dtype),
+        "cm_wr": common.dense_init(ks[11], (d, d), dtype=dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: x_{t-1} sequence; position 0 gets ``x_prev`` (B, d)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(params, x, xs):
+    """Per-token mix coefficients -> the 5 mixed inputs (B,S,5,d)."""
+    B, S, d = x.shape
+    delta = xs - x
+    base_mix = params["mu_base"]                                  # (5, d)
+    z = jnp.tanh((x + delta * base_mix[0]) @ params["ddlerp_A"])  # (B,S,5*R)
+    z = z.reshape(B, S, MIXES, DDLERP_RANK)
+    dyn = jnp.einsum("bsmr,mrd->bsmd", z, params["ddlerp_B"].astype(z.dtype))
+    mix = base_mix[None, None] + dyn                              # (B,S,5,d)
+    return x[:, :, None, :] + delta[:, :, None, :] * mix
+
+
+def time_mix(params, x, state_S, x_prev, cfg: ModelConfig
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d); state_S: (B,H,hd,hd) f32; x_prev: (B,d).
+
+    Returns (out, new_S, new_x_prev)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    xs = _shift(x, x_prev)
+    mixed = _ddlerp(params, x, xs)                                # (B,S,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(MIXES)]
+
+    r = (xr @ params["w_r"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["w_g"])
+    decay = params["decay_base"] + jnp.tanh(xw @ params["decay_A"]) @ params["decay_B"]
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).reshape(B, S, H, hd)
+    u = params["bonus_u"]                                         # (H, hd)
+
+    def step(S_prev, inp):
+        r_t, k_t, v_t, w_t = inp                                  # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]                # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_prev + u[..., :, None] * kv)
+        S_new = w_t[..., :, None] * S_prev + kv
+        return S_new, y
+
+    seq = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+           jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    new_S, ys = jax.lax.scan(step, state_S, seq)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d)                   # (B,S,d)
+
+    # per-head groupnorm then gate
+    yh = y.reshape(B, S, H, hd)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = yh.reshape(B, S, d) * params["ln_x_scale"]
+    out = (y.astype(x.dtype) * g) @ params["w_o"]
+    return out, new_S, x[:, -1, :]
+
+
+def channel_mix(params, x, x_prev) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xs = _shift(x, x_prev)
+    xk = x + (xs - x) * params["cm_mu_k"]
+    xr = x + (xs - x) * params["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ params["cm_wr"]) * (k @ params["cm_wv"])
+    return out, x[:, -1, :]
+
+
+def rwkv_block(params, x, norm1, norm2, state, cfg: ModelConfig):
+    """Pre-LN residual block: time-mix + channel-mix.
+
+    state: {"S": (B,H,hd,hd), "x_tm": (B,d), "x_cm": (B,d)}.
+    """
+    h = common.apply_norm(x, norm1, cfg)
+    att, new_S, new_x_tm = time_mix(params, h, state["S"], state["x_tm"], cfg)
+    x = x + att.astype(x.dtype)
+    h = common.apply_norm(x, norm2, cfg)
+    cm, new_x_cm = channel_mix(params, h, state["x_cm"])
+    x = x + cm.astype(x.dtype)
+    return x, {"S": new_S, "x_tm": new_x_tm, "x_cm": new_x_cm}
+
+
+def init_rwkv_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    return {"S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_tm": jnp.zeros((batch, d), dtype),
+            "x_cm": jnp.zeros((batch, d), dtype)}

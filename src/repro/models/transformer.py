@@ -1,0 +1,461 @@
+"""Decoder-only LM assembly for all assigned non-enc-dec architectures.
+
+Homogeneous stacks (dense / moe / mla / vlm / ssm) are layer-stacked and
+consumed with ``jax.lax.scan`` (small HLO even at 96 layers); the Griffin
+hybrid's 1:2 recurrent:attention pattern is unrolled (26 small layers).
+
+Three entry points per model (the shapes the dry-run lowers):
+  loss(params, batch, rng)            — train_4k
+  prefill(params, tokens)             — prefill_32k (returns logits + cache)
+  decode_step(params, cache, tokens, pos) — decode_32k / long_500k (1 token)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import Config, ModelConfig
+from repro.models import attention as attn
+from repro.models import common, griffin, mla, mlp, rwkv
+from repro.sharding.context import shard
+
+PyTree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block init / apply (one layer)
+# ---------------------------------------------------------------------------
+
+def block_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    if cfg.recurrent.kind == "rwkv6":
+        return "rwkv6"
+    if cfg.family == "hybrid" and cfg.recurrent.block_pattern:
+        pat = cfg.recurrent.block_pattern
+        return "recurrent" if pat[layer_idx % len(pat)] == "recurrent" else "local_attention"
+    return "attention"
+
+
+def init_block(key, cfg: ModelConfig, kind: str) -> Dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "norm1": common.make_norm_params(ks[0], cfg, cfg.d_model),
+        "norm2": common.make_norm_params(ks[0], cfg, cfg.d_model),
+    }
+    if kind == "rwkv6":
+        p["rwkv"] = rwkv.init_rwkv_params(ks[1], cfg, dtype=dt)
+        return p
+    if kind == "recurrent":
+        p["rec"] = griffin.init_recurrent_params(ks[1], cfg, dtype=dt)
+    elif cfg.mla.enabled:
+        p["mla"] = mla.init_mla_params(ks[1], cfg, dtype=dt)
+    else:
+        p["attn"] = attn.init_attention_params(ks[1], cfg, dtype=dt)
+    # every block (incl. Griffin recurrent) carries a feed-forward
+    if cfg.moe.enabled:
+        p["moe"] = mlp.init_moe_params(ks[2], cfg, dtype=dt)
+    else:
+        p["mlp"] = mlp.init_mlp_params(ks[2], cfg, dtype=dt)
+    return p
+
+
+def _block_window(cfg: ModelConfig, kind: str) -> int:
+    if kind == "local_attention":
+        return cfg.local_window
+    return cfg.attention_window
+
+
+def apply_block_full(params, x, positions, cfg: ModelConfig, kind: str,
+                     state: Optional[Dict] = None):
+    """Full-sequence block (train / prefill).
+
+    Returns (x, cache_entry, aux_loss). ``state`` provides initial recurrent
+    state (zeros at sequence start)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv6":
+        st = state if state is not None else rwkv.init_rwkv_state(x.shape[0], cfg, x.dtype)
+        x, new_state = rwkv.rwkv_block(params["rwkv"], x, params["norm1"],
+                                       params["norm2"], st, cfg)
+        return x, new_state, aux
+
+    h = common.apply_norm(x, params["norm1"], cfg)
+    if kind == "recurrent":
+        st = state if state is not None else griffin.init_recurrent_state(x.shape[0], cfg, x.dtype)
+        mix, cache_entry = griffin.recurrent_block(params["rec"], h, st, cfg)
+    elif cfg.mla.enabled:
+        mix, latent = mla.mla_attention(params["mla"], h, positions, cfg,
+                                        window=_block_window(cfg, kind))
+        cache_entry = latent
+    else:
+        mix, (k, v) = attn.self_attention(params["attn"], h, positions, cfg,
+                                          window=_block_window(cfg, kind))
+        cache_entry = (k, v)
+    x = x + mix.astype(x.dtype)
+    x = shard(x, "batch", None, None)
+
+    h = common.apply_norm(x, params["norm2"], cfg)
+    if cfg.moe.enabled:
+        ff, aux = mlp.moe(params["moe"], h, cfg)
+    else:
+        ff = mlp.mlp(params["mlp"], h, cfg)
+    x = x + ff.astype(x.dtype)
+    x = shard(x, "batch", None, None)
+    return x, cache_entry, aux
+
+
+def apply_block_decode(params, x, positions, cfg: ModelConfig, kind: str,
+                       cache_entry, kv_pos, write_slot):
+    """One-token block. Returns (x, new_cache_entry)."""
+    if kind == "rwkv6":
+        x, new_state = rwkv.rwkv_block(params["rwkv"], x, params["norm1"],
+                                       params["norm2"], cache_entry, cfg)
+        return x, new_state
+
+    h = common.apply_norm(x, params["norm1"], cfg)
+    window = _block_window(cfg, kind)
+    if kind == "recurrent":
+        mix, new_entry = griffin.recurrent_block(params["rec"], h, cache_entry, cfg)
+    elif cfg.mla.enabled:
+        mix, new_latent, _ = mla.mla_decode(params["mla"], h, positions, cfg,
+                                            cache=cache_entry, kv_pos=kv_pos,
+                                            write_slot=write_slot, window=window)
+        new_entry = new_latent
+    else:
+        ck, cv = cache_entry
+        mix, nk, nv = attn.decode_self_attention(
+            params["attn"], h, positions, cfg, cache_k=ck, cache_v=cv,
+            kv_pos=kv_pos, write_slot=write_slot, window=window)
+        new_entry = (nk, nv)
+    x = x + mix.astype(x.dtype)
+
+    h = common.apply_norm(x, params["norm2"], cfg)
+    if cfg.moe.enabled:
+        ff, _ = mlp.moe(params["moe"], h, cfg)
+    else:
+        ff = mlp.mlp(params["mlp"], h, cfg)
+    return x + ff.astype(x.dtype), new_entry
+
+
+# ---------------------------------------------------------------------------
+# the language model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LM:
+    """Decoder-only language model (all families except enc-dec / cnn)."""
+    config: Config
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.config.model
+
+    @property
+    def homogeneous(self) -> bool:
+        return self.cfg.family != "hybrid"
+
+    # -- init ----------------------------------------------------------------
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k_emb, k_blocks, k_head, k_mtp = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": common.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype=dt),
+            "final_norm": common.make_norm_params(k_head, cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = common.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=dt)
+
+        if self.homogeneous:
+            kind = block_kind(cfg, 0)
+            keys = jax.random.split(k_blocks, cfg.n_layers)
+            params["blocks"] = jax.vmap(lambda k: init_block(k, cfg, kind))(keys)
+        else:
+            keys = jax.random.split(k_blocks, cfg.n_layers)
+            params["blocks"] = [init_block(keys[i], cfg, block_kind(cfg, i))
+                                for i in range(cfg.n_layers)]
+
+        if cfg.mtp_depth > 0:
+            params["mtp"] = {
+                "proj": common.dense_init(k_mtp, (2 * cfg.d_model, cfg.d_model), dtype=dt),
+                "block": init_block(jax.random.fold_in(k_mtp, 1), cfg, "attention"),
+                "norm": common.make_norm_params(k_mtp, cfg, cfg.d_model),
+            }
+        return params
+
+    # -- forward (full sequence) ----------------------------------------------
+
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return shard(x, "batch", None, None)
+
+    def _logits(self, params, x):
+        if self.cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["head"]
+        return shard(logits.astype(jnp.float32), "batch", None, "vocab")
+
+    def forward(self, params, tokens, *, remat: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, PyTree]:
+        """tokens (B, S) -> (logits, aux_loss, (h_final, caches))."""
+        x, aux, caches = self._backbone(params, tokens, remat=remat)
+        return self._logits(params, x), aux, (x, caches)
+
+    def _backbone(self, params, tokens, *, remat: bool = False
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, PyTree]:
+        """tokens (B, S) -> (normed hidden states, aux_loss, caches)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed(params, tokens)
+
+        if self.homogeneous:
+            kind = block_kind(cfg, 0)
+
+            def body(carry, layer_params):
+                h, aux = carry
+                h, cache_entry, aux_l = apply_block_full(layer_params, h,
+                                                         positions, cfg, kind)
+                return (h, aux + aux_l), cache_entry
+
+            if remat:
+                body = jax.checkpoint(body)
+            (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                            params["blocks"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            caches = []
+            for i, bp in enumerate(params["blocks"]):
+                fn = functools.partial(apply_block_full, cfg=cfg,
+                                       kind=block_kind(cfg, i))
+                if remat:
+                    fn = jax.checkpoint(fn)
+                x, cache_entry, aux_l = fn(bp, x, positions)
+                caches.append(cache_entry)
+                aux = aux + aux_l
+
+        x = common.apply_norm(x, params["final_norm"], cfg)
+        return x, aux, caches
+
+    # -- training loss ---------------------------------------------------------
+
+    def loss(self, params, batch: Dict[str, jnp.ndarray], rng=None,
+             *, remat: Optional[bool] = None) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        remat = self.config.train.remat if remat is None else remat
+        tokens, labels = batch["tokens"], batch["labels"]
+        logits, aux, (h_final, _) = self.forward(params, tokens, remat=remat)
+        ce = _cross_entropy(logits, labels)
+        total = ce + aux
+        metrics = {"ce": ce, "aux": aux}
+
+        if cfg.mtp_depth > 0:
+            # multi-token prediction: predict t+2 from (h_t, emb(label_t))
+            mtp = params["mtp"]
+            emb_next = self._embed(params, labels)
+            h = jnp.concatenate([h_final.astype(emb_next.dtype), emb_next], -1) @ mtp["proj"]
+            B, S = labels.shape
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            h, _, _ = apply_block_full(mtp["block"], h, positions, cfg, "attention")
+            h = common.apply_norm(h, mtp["norm"], cfg)
+            mtp_logits = self._logits(params, h)
+            labels2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+            mtp_ce = _cross_entropy(mtp_logits, labels2)
+            total = total + 0.3 * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        return total, metrics
+
+    # -- serving ----------------------------------------------------------------
+
+    def cache_capacity(self, kind: str, seq_len: int) -> int:
+        w = _block_window(self.cfg, kind)
+        return min(w, seq_len) if w > 0 else seq_len
+
+    def init_cache(self, batch: int, seq_len: int) -> PyTree:
+        """Empty cache sized for a ``seq_len`` context."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        hd = cfg.resolved_head_dim
+        L = cfg.n_layers
+
+        def attn_cache(kind):
+            C = self.cache_capacity(kind, seq_len)
+            return (jnp.zeros((batch, C, cfg.n_kv_heads, hd), dt),
+                    jnp.zeros((batch, C, cfg.n_kv_heads, hd), dt))
+
+        if self.homogeneous:
+            kind = block_kind(cfg, 0)
+            if kind == "rwkv6":
+                st = rwkv.init_rwkv_state(batch, cfg, dt)
+                entries = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), st)
+                return {"layers": entries, "length": jnp.zeros((), jnp.int32)}
+            C = self.cache_capacity(kind, seq_len)
+            if cfg.mla.enabled:
+                m = cfg.mla
+                lat = jnp.zeros((L, batch, C, m.kv_lora_rank + m.qk_rope_head_dim), dt)
+                entries = lat
+            else:
+                k, v = attn_cache(kind)
+                entries = (jnp.broadcast_to(k, (L,) + k.shape).copy(),
+                           jnp.broadcast_to(v, (L,) + v.shape).copy())
+            return {"layers": entries,
+                    "kv_pos": jnp.full((batch, C), -1, jnp.int32),
+                    "length": jnp.zeros((), jnp.int32)}
+
+        # hybrid: per-layer entries; attention layers share kv_pos
+        entries = []
+        kv_pos = None
+        for i in range(cfg.n_layers):
+            kind = block_kind(cfg, i)
+            if kind == "recurrent":
+                entries.append(griffin.init_recurrent_state(batch, cfg, dt))
+            else:
+                entries.append(attn_cache(kind))
+                C = self.cache_capacity(kind, seq_len)
+                kv_pos = jnp.full((batch, C), -1, jnp.int32)
+        return {"layers": entries, "kv_pos": kv_pos,
+                "length": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, tokens, *, max_len: int = 0
+                ) -> Tuple[jnp.ndarray, PyTree]:
+        """Process a full prompt; return (last-position logits, filled cache).
+
+        Logits are computed for the LAST position only — the full-sequence
+        head matmul would dominate prefill memory at large vocabularies.
+        ``max_len`` sizes the cache for subsequent decode steps (default: the
+        prompt length; pass prompt+new_tokens to continue generating without
+        ring-overwriting the earliest positions).
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        max_len = max(max_len, S)
+        h, _, caches = self._backbone(params, tokens)
+        logits = self._logits(params, h[:, -1:])
+
+        def fit(x, C, axis):
+            """Right-align a length-S seq dim into capacity C (pad or crop)."""
+            if C == S:
+                return x
+            if C < S:
+                # ring-slot alignment (slot = pos % C) needs S % C == 0
+                assert S % C == 0, (
+                    f"windowed prefill->decode needs prompt length ({S}) to be "
+                    f"a multiple of the window ({C})")
+                idx = [slice(None)] * x.ndim
+                idx[axis] = slice(S - C, S)
+                return x[tuple(idx)]
+            pad = [(0, 0)] * x.ndim
+            pad[axis] = (0, C - S)
+            return jnp.pad(x, pad)
+
+        def positions(C):
+            if C <= S:
+                return jnp.broadcast_to(jnp.arange(S - C, S, dtype=jnp.int32),
+                                        (B, C))
+            pos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                                   jnp.full((C - S,), -1, jnp.int32)])
+            return jnp.broadcast_to(pos, (B, C))
+
+        length = jnp.full((), S, jnp.int32)
+        if self.homogeneous:
+            kind = block_kind(cfg, 0)
+            if kind == "rwkv6":
+                return logits[:, -1], {"layers": caches, "length": length}
+            C = self.cache_capacity(kind, max_len)
+            kv_pos = positions(C)
+            if cfg.mla.enabled:
+                entries = fit(caches, C, axis=2)
+            else:
+                k, v = caches
+                entries = (fit(k, C, axis=2), fit(v, C, axis=2))
+            return logits[:, -1], {"layers": entries, "kv_pos": kv_pos,
+                                   "length": length}
+        entries = []
+        kv_pos = None
+        for i, ce in enumerate(caches):
+            kind = block_kind(cfg, i)
+            if kind == "recurrent":
+                entries.append(ce)
+            else:
+                C = self.cache_capacity(kind, max_len)
+                k, v = ce
+                entries.append((fit(k, C, axis=1), fit(v, C, axis=1)))
+                kv_pos = positions(C)
+        return logits[:, -1], {"layers": entries, "kv_pos": kv_pos, "length": length}
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jnp.ndarray, PyTree]:
+        """tokens (B, 1): one decode step against the cache."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        length = cache["length"]
+        positions = jnp.broadcast_to(length, (B, 1)).astype(jnp.int32)
+        x = self._embed(params, tokens)
+
+        if self.homogeneous:
+            kind = block_kind(cfg, 0)
+            if kind == "rwkv6":
+                def body(h, layer):
+                    lp, entry = layer
+                    h, new_entry = apply_block_decode(lp, h, positions, cfg,
+                                                      kind, entry, None, None)
+                    return h, new_entry
+                x, new_entries = jax.lax.scan(body, x, (params["blocks"],
+                                                        cache["layers"]))
+                new_cache = {"layers": new_entries, "length": length + 1}
+            else:
+                C = (cache["layers"] if cfg.mla.enabled
+                     else cache["layers"][0]).shape[2]
+                slot = jnp.broadcast_to(length % C, (B,)).astype(jnp.int32)
+                kv_pos = cache["kv_pos"]
+
+                def body(h, layer):
+                    lp, entry = layer
+                    h, new_entry = apply_block_decode(lp, h, positions, cfg,
+                                                      kind, entry, kv_pos, slot)
+                    return h, new_entry
+                x, new_entries = jax.lax.scan(body, x, (params["blocks"],
+                                                        cache["layers"]))
+                new_kv_pos = jax.vmap(
+                    lambda kp, s, p: jax.lax.dynamic_update_slice_in_dim(kp, p, s, 0)
+                )(kv_pos, slot, positions)
+                new_cache = {"layers": new_entries, "kv_pos": new_kv_pos,
+                             "length": length + 1}
+        else:
+            new_entries = []
+            new_kv_pos = cache.get("kv_pos")
+            for i, bp in enumerate(params["blocks"]):
+                kind = block_kind(cfg, i)
+                entry = cache["layers"][i]
+                if kind == "recurrent":
+                    x, new_entry = apply_block_decode(bp, x, positions, cfg,
+                                                      kind, entry, None, None)
+                else:
+                    C = entry[0].shape[1]
+                    slot = jnp.broadcast_to(length % C, (B,)).astype(jnp.int32)
+                    x, new_entry = apply_block_decode(bp, x, positions, cfg, kind,
+                                                      entry, cache["kv_pos"], slot)
+                    new_kv_pos = jax.vmap(
+                        lambda kp, s, p: jax.lax.dynamic_update_slice_in_dim(kp, p, s, 0)
+                    )(cache["kv_pos"], slot, positions)
+                new_entries.append(new_entry)
+            new_cache = {"layers": new_entries, "kv_pos": new_kv_pos,
+                         "length": length + 1}
+
+        x = common.apply_norm(x, params["final_norm"], cfg)
+        return self._logits(params, x), new_cache
+
+
+def _cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (
+    Optimizer, apply_updates, sgd, adam, adamw, cosine_schedule,
+    linear_warmup, make_optimizer,
+)
+
+__all__ = ["Optimizer", "apply_updates", "sgd", "adam", "adamw",
+           "cosine_schedule", "linear_warmup", "make_optimizer"]

@@ -1,0 +1,130 @@
+"""Minimal optimizer library (optax is not available offline).
+
+An ``Optimizer`` is an (init, update) pair over pytrees:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+The paper trains with plain SGD (eq. 3); Adam/AdamW are provided for the
+larger assigned-architecture drivers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def _to_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        lr_t = sched(step)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mu"], grads)
+            updates = jax.tree_util.tree_map(lambda m: -lr_t * m, mu)
+            return updates, {"step": step + 1, "mu": mu}
+        updates = jax.tree_util.tree_map(
+            lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree_util.tree_map(upd, m, v,
+                                         params if params is not None else m)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def linear_warmup(base_lr: float, warmup_steps: int) -> Schedule:
+    def sched(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return base_lr * frac
+    return sched
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_frac: float = 0.1) -> Schedule:
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return sched
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, momentum=kw.get("momentum", 0.0))
+    if name == "adam":
+        return adam(lr)
+    if name == "adamw":
+        return adamw(lr, weight_decay=kw.get("weight_decay", 0.01))
+    raise ValueError(name)

@@ -1,0 +1,1 @@
+"""Divisibility-aware param/cache PartitionSpec rules + activation hooks."""

@@ -1,0 +1,173 @@
+"""Parameter & cache PartitionSpec derivation (divisibility-aware).
+
+``param_specs(model, config, mesh)`` walks the eval_shape'd parameter tree
+and assigns a spec per leaf from its path name:
+
+* column-parallel mats (wq/wk/wv, w_up, w_gate, …) shard the OUTPUT feature
+  dim over ``model``; row-parallel mats (wo, w_down, …) shard the INPUT dim.
+* attention projections shard only when the head count divides the model
+  axis (combined H·hd columns stay head-aligned); otherwise they replicate —
+  the vLLM-style fallback (and the head-padding hillclimb target, §Perf).
+* MoE expert tensors shard the EXPERT dim over ``model`` (expert parallelism)
+  when E divides it, else the ff dim.
+* with ``train.fsdp`` the opposite feature dim additionally shards over
+  ``data`` (per-layer all-gather inside the scan — classic FSDP).
+
+Every rule checks divisibility and falls back to replication rather than
+producing an invalid spec — the dry-run gate is "lowers and compiles", so a
+silent bad spec would surface there.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# path-name classification
+COL_PARALLEL = {"wq", "wk", "wv", "w_up", "w_gate", "w_uq", "w_uk", "w_uv",
+                "cm_wk", "w_x", "w_a", "w_i", "w_r", "w_k", "w_v", "w_g",
+                "ddlerp_A", "decay_A", "head"}
+ROW_PARALLEL = {"wo", "w_o", "w_down", "cm_wv", "cm_wr", "w_out", "decay_B",
+                "ddlerp_B"}
+ATTN_MATS = {"wq", "wk", "wv", "wo"}
+REPLICATED = {"router", "mu_base", "decay_base", "bonus_u", "ln_x_scale",
+              "cm_mu_k", "cm_mu_r", "conv_w", "conv_b", "b_a", "b_i", "lam",
+              "q_norm", "kv_norm", "w_dq", "w_dkv", "proj"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+    return tuple(names)
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+class ParamRules:
+    def __init__(self, config, mesh: Mesh):
+        self.cfg = config.model
+        self.fsdp = config.train.fsdp and "data" in mesh.shape
+        self.dp_over_model = config.train.dp_over_model
+        self.zero_over_model = config.train.zero_over_model
+        self.mesh = mesh
+        m = mesh.shape.get("model", 1)
+        self.attn_q_ok = self.cfg.n_heads % m == 0
+        self.attn_kv_ok = self.cfg.n_kv_heads % m == 0
+
+    def spec_for(self, path, aval) -> P:
+        if self.dp_over_model and not self.zero_over_model:
+            # params replicate over `model` (it acts as extra DP inside the
+            # cohort); only FSDP-over-data sharding may still apply
+            return self._fsdp_only(aval.shape) if aval.ndim > 1 else P()
+        # zero_over_model: params STAY model-sharded (TP-style placement);
+        # with batch also sharded over `model`, GSPMD all-gathers per use —
+        # ZeRO-within-cohort (DESIGN.md §6 / EXPERIMENTS.md §Perf)
+        return self._spec_tp(path, aval)
+
+    def _spec_tp(self, path, aval) -> P:
+        names = _path_names(path)
+        name = names[-1]
+        shape = aval.shape
+        mesh = self.mesh
+        in_moe = "moe" in names
+
+        if name.startswith("b") or aval.ndim <= 1 or name in REPLICATED \
+           or "norm" in name or "norm1" in names or "norm2" in names \
+           or "final_norm" in names or name in ("scale", "bias"):
+            return P()
+
+        if name == "embed":
+            spec: list = [None] * aval.ndim
+            if _div(shape[0], mesh, "model"):
+                spec[0] = "model"
+            if self.fsdp and _div(shape[1], mesh, "data"):
+                spec[1] = "data"
+            return P(*spec)
+
+        if in_moe and name in ("w_gate", "w_up", "w_down"):
+            # stacked (L, E, a, b) or (E, a, b)
+            e_dim = aval.ndim - 3
+            spec = [None] * aval.ndim
+            if _div(shape[e_dim], mesh, "model"):
+                spec[e_dim] = "model"
+            elif name in ("w_gate", "w_up") and _div(shape[-1], mesh, "model"):
+                spec[-1] = "model"
+            elif name == "w_down" and _div(shape[-2], mesh, "model"):
+                spec[-2] = "model"
+            if self.fsdp:
+                # shard d_model over data on whichever of the last two is free
+                d_dim = aval.ndim - 2 if name in ("w_gate", "w_up") else aval.ndim - 1
+                if spec[d_dim] is None and _div(shape[d_dim], mesh, "data"):
+                    spec[d_dim] = "data"
+            return P(*spec)
+
+        if name in ATTN_MATS and not self.cfg.mla.enabled:
+            ok = {"wq": self.attn_q_ok, "wo": self.attn_q_ok,
+                  "wk": self.attn_kv_ok, "wv": self.attn_kv_ok}[name]
+            if not ok:
+                return self._fsdp_only(shape, model_dim=None)
+        if name in ("w_uq", "w_uk", "w_uv", "wo") and self.cfg.mla.enabled:
+            if not self.attn_q_ok:
+                return self._fsdp_only(shape, model_dim=None)
+
+        if name in COL_PARALLEL:
+            return self._matmul_spec(shape, model_dim=-1, fsdp_dim=-2)
+        if name in ROW_PARALLEL:
+            return self._matmul_spec(shape, model_dim=-2, fsdp_dim=-1)
+        return P()
+
+    def _matmul_spec(self, shape, model_dim: int, fsdp_dim: int) -> P:
+        spec = [None] * len(shape)
+        if _div(shape[model_dim], self.mesh, "model"):
+            spec[model_dim] = "model"
+        if self.fsdp and shape[fsdp_dim] >= 1024 and _div(shape[fsdp_dim], self.mesh, "data"):
+            spec[fsdp_dim] = "data"
+        return P(*spec)
+
+    def _fsdp_only(self, shape, model_dim=None) -> P:
+        spec = [None] * len(shape)
+        if self.fsdp and shape[-2] >= 1024 and _div(shape[-2], self.mesh, "data"):
+            spec[-2] = "data"
+        return P(*spec)
+
+
+def param_specs(model, config, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree matching ``model.init``'s output structure."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    rules = ParamRules(config, mesh)
+    return jax.tree_util.tree_map_with_path(rules.spec_for, shapes)
+
+
+def param_shardings(model, config, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  param_specs(model, config, mesh))
+
+
+def bytes_per_device(shapes: PyTree, shardings: PyTree) -> int:
+    """Analytic per-device parameter bytes under the given shardings."""
+    total = 0
+    for aval, sh in zip(jax.tree_util.tree_leaves(shapes),
+                        jax.tree_util.tree_leaves(shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = int(np.prod(aval.shape)) * aval.dtype.itemsize
+        spec = sh.spec
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axs = entry if isinstance(entry, tuple) else (entry,)
+            for a in axs:
+                denom *= sh.mesh.shape[a]
+        total += n // max(denom, 1)
+    return total

@@ -1,0 +1,1 @@
+"""HLO parsing, roofline constants, analytic cost model."""

@@ -1,0 +1,79 @@
+"""Collective-byte accounting from compiled HLO text.
+
+``cost_analysis()`` has no collective term, so we parse the (post-SPMD)
+module: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute instruction contributes the byte size of its OPERANDS
+(resolved against the instruction definitions earlier in the module).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+([\w\-]+)")
+_ARGS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of 'f32[2048,16]{1,0}' or a '(t1, t2)' tuple type."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of operand bytes per collective kind (+ 'total')."""
+    defs: Dict[str, int] = {}
+    per_kind: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+
+    lines = hlo_text.splitlines()
+    for line in lines:  # pass 1: all instruction definitions
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1)] = _shape_bytes(m.group(2))
+
+    for line in lines:  # pass 2: collectives
+        stripped = line.strip()
+        for kind in COLLECTIVES:
+            # match `= <type> kind(` or `= <type> kind-start(` etc.
+            if re.search(rf"=\s*[^=]*\b{kind}(?:-start)?\(", stripped):
+                args_m = _ARGS_RE.search(stripped[stripped.index(kind):])
+                nbytes = 0
+                if args_m:
+                    for arg in args_m.group(1).split(","):
+                        arg = arg.strip()
+                        if arg.startswith("%") and arg in defs:
+                            nbytes += defs[arg]
+                if nbytes == 0:
+                    # fall back to the result type on the lhs
+                    eq = stripped.split("=", 1)
+                    if len(eq) == 2:
+                        nbytes = _shape_bytes(eq[1].split(kind)[0])
+                per_kind[kind] += nbytes
+                counts[kind] += 1
+                break
+
+    out = dict(per_kind)
+    out["total"] = sum(per_kind.values())
+    out["counts"] = dict(counts)  # type: ignore[assignment]
+    return out

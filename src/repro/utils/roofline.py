@@ -1,0 +1,78 @@
+"""TPU v5e roofline constants and term derivation (DESIGN.md §7).
+
+cost_analysis() of an SPMD-partitioned module reports PER-DEVICE flops/bytes
+(verified empirically in tests), and the parsed HLO collective operands are
+per-device shard sizes — so every term below is per-chip seconds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12   # per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link per chip
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float
+    hlo_flops_global: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.hlo_flops_global <= 0:
+            return 0.0
+        return self.model_flops_global / self.hlo_flops_global
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "hlo_flops_global": self.hlo_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def derive_terms(*, flops_per_device: float, bytes_per_device: float,
+                 collective_bytes_per_device: float, num_devices: int,
+                 model_flops_global: float) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / PEAK_FLOPS_BF16,
+        memory_s=bytes_per_device / HBM_BW,
+        collective_s=collective_bytes_per_device / ICI_BW,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        collective_bytes_per_device=collective_bytes_per_device,
+        model_flops_global=model_flops_global,
+        hlo_flops_global=flops_per_device * num_devices,
+    )
+
+
+def model_flops(config, shape) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference) — the 'useful' flops."""
+    n_active = config.model.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

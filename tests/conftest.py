@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; multi-device tests spawn their own mesh via the session-scoped
+`multi_device` fixture module (tests/test_distributed.py sets the flag in a
+subprocess)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

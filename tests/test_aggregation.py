@@ -1,0 +1,81 @@
+"""Error-aware aggregation (paper eq. 5/6): pure + kernel forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QuantConfig
+from repro.core import aggregation as agg
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _deltas(key, K, shape):
+    return jax.random.normal(key, (K,) + shape) * 0.01
+
+
+def test_error_aware_matches_manual():
+    K = 5
+    key = jax.random.PRNGKey(0)
+    w = {"p": jnp.zeros((13,))}
+    deltas = {"p": _deltas(key, K, (13,))}
+    alphas = jnp.asarray([0.1, 0.2, 0.3, 0.25, 0.15])
+    lam = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
+    out = agg.error_aware_aggregate(w, deltas, alphas, lam)
+    wts = alphas * lam
+    want = (deltas["p"] * wts[:, None]).sum(0) / wts.sum()
+    np.testing.assert_allclose(np.asarray(out["p"]), np.asarray(want), rtol=1e-6)
+
+
+def test_error_aware_ignores_failed_clients():
+    """A failed client's delta must not influence the result at all."""
+    K = 4
+    key = jax.random.PRNGKey(1)
+    w = {"p": jnp.zeros((8,))}
+    deltas = {"p": _deltas(key, K, (8,))}
+    poisoned = {"p": deltas["p"].at[2].set(1e9)}
+    alphas = jnp.full((K,), 0.25)
+    lam = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    a = agg.error_aware_aggregate(w, deltas, alphas, lam)
+    b = agg.error_aware_aggregate(w, poisoned, alphas, lam)
+    np.testing.assert_allclose(np.asarray(a["p"]), np.asarray(b["p"]))
+
+
+def test_naive_vs_error_aware_scaling():
+    """eq. 5 divides by K (shrinks with drops); eq. 6 renormalizes."""
+    K = 4
+    deltas = {"p": jnp.ones((K, 3))}
+    w = {"p": jnp.zeros((3,))}
+    alphas = jnp.full((K,), 1.0 / K)
+    lam = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    naive = agg.naive_aggregate(w, deltas, lam)
+    aware = agg.error_aware_aggregate(w, deltas, alphas, lam)
+    np.testing.assert_allclose(np.asarray(naive["p"]), 0.5)  # 2/4
+    np.testing.assert_allclose(np.asarray(aware["p"]), 1.0)  # 2/2
+
+
+def test_all_failed_round_is_noop_for_error_aware():
+    K = 3
+    deltas = {"p": jnp.ones((K, 5))}
+    w = {"p": jnp.full((5,), 7.0)}
+    out = agg.error_aware_aggregate(w, deltas, jnp.full((K,), 1 / 3),
+                                    jnp.zeros((K,)))
+    np.testing.assert_allclose(np.asarray(out["p"]), 7.0)
+
+
+def test_int_container_selection():
+    assert agg._int_container(8, 16) == jnp.int16   # 7+4+1 = 12 bits
+    assert agg._int_container(8, 512) == jnp.int32  # 7+9+1 = 17 > 15 bits
+    assert agg._int_container(16, 4) == jnp.int32
+
+
+def test_aggregate_kernel_matches_pure():
+    """Pallas masked_aggregate == eq. 6 numerator/denominator."""
+    K, D = 10, 4096
+    upd = jax.random.normal(jax.random.PRNGKey(2), (K, D))
+    alphas = jax.random.uniform(jax.random.PRNGKey(3), (K,))
+    lam = (jax.random.uniform(jax.random.PRNGKey(4), (K,)) > 0.3).astype(jnp.float32)
+    got = kops.masked_aggregate(upd, alphas * lam)
+    want = kref.masked_aggregate_ref(upd, alphas * lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-7)

@@ -1,0 +1,94 @@
+"""Finite-blocklength channel (eq. 8) + energy model (eq. 7/9/14) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ChannelConfig, EnergyConfig, FLConfig
+from repro.core import channel as ch
+from repro.core import energy as en
+
+
+def test_qfunc_inverse_known_values():
+    # Q(1.2816) ~ 0.1 ; Q(2.3263) ~ 0.01 ; Q(0) = 0.5
+    np.testing.assert_allclose(float(ch.qfunc_inv(0.5)), 0.0, atol=1e-6)
+    np.testing.assert_allclose(float(ch.qfunc_inv(0.1)), 1.2816, atol=2e-3)
+    np.testing.assert_allclose(float(ch.qfunc_inv(0.01)), 2.3263, atol=2e-3)
+
+
+def test_fbl_rate_below_shannon_and_monotone():
+    snrs = jnp.asarray([1.0, 10.0, 100.0, 1e4])
+    for M in (200, 1000, 5000):
+        r = ch.fbl_rate(snrs, M, 0.01)
+        c = ch.capacity(snrs)
+        assert (r <= c + 1e-6).all(), "FBL rate must not exceed capacity"
+        assert (jnp.diff(r) > 0).all(), "rate must increase with SNR"
+    # longer blocks approach capacity
+    r200 = ch.fbl_rate(10.0, 200, 0.01)
+    r5000 = ch.fbl_rate(10.0, 5000, 0.01)
+    assert float(r5000) > float(r200)
+
+
+def test_fbl_rate_decreases_with_reliability():
+    """Stricter (smaller) q costs rate — the paper's core trade-off."""
+    r_strict = ch.fbl_rate(10.0, 1000, 0.001)
+    r_loose = ch.fbl_rate(10.0, 1000, 0.1)
+    assert float(r_strict) < float(r_loose)
+
+
+def test_rayleigh_gain_mean():
+    g2 = ch.sample_rayleigh_gain2(jax.random.PRNGKey(0), (200_000,), scale=1.0)
+    np.testing.assert_allclose(float(g2.mean()), 1.0, rtol=0.02)
+
+
+def test_packet_success_rate():
+    lam = ch.sample_packet_success(jax.random.PRNGKey(1), (100_000,), 0.1)
+    np.testing.assert_allclose(float(lam.mean()), 0.9, atol=5e-3)
+
+
+def test_local_energy_paper_numbers():
+    """eq. 7 with the paper's §IV constants: e^l = beta C f^2 d n I."""
+    cfg = EnergyConfig()
+    e32 = en.local_training_energy_j(cfg, 421_642, 32, 3)
+    # 1e-27 * 40 * (1e9)^2 * 421642*32 * 3
+    np.testing.assert_allclose(float(e32), 1e-27 * 40 * 1e18 * 421_642 * 32 * 3,
+                               rtol=1e-6)
+    e8 = en.local_training_energy_j(cfg, 421_642, 8, 3)
+    np.testing.assert_allclose(float(e8 / e32), 0.25, rtol=1e-6)  # 75% saving
+
+
+def test_uplink_energy_scales_with_bits_and_power():
+    ch_cfg = ChannelConfig()
+    rate = jnp.asarray(10.0)
+    e8 = en.uplink_energy_j(ch_cfg, 421_642, 8, rate)
+    e32 = en.uplink_energy_j(ch_cfg, 421_642, 32, rate)
+    np.testing.assert_allclose(float(e32 / e8), 4.0, rtol=1e-6)
+    e_hi = en.uplink_energy_j(ch_cfg, 421_642, 8, rate, tx_power_w=0.2)
+    np.testing.assert_allclose(float(e_hi / e8), 2.0, rtol=1e-6)
+
+
+def test_expected_total_energy_eq14():
+    """f_e = (K T / N) sum_k e_k with homogeneous rates."""
+    e_cfg, ch_cfg = EnergyConfig(), ChannelConfig()
+    N, K, T = 100, 10, 7
+    rates = jnp.full((N,), 20.0)
+    total = en.expected_total_energy_j(
+        e_cfg, ch_cfg, num_params=1000, bits=8, local_iters=3,
+        rates_per_device=rates, num_devices=N, devices_per_round=K, rounds=T)
+    per_dev = (en.local_training_energy_j(e_cfg, 1000, 8, 3)
+               + en.uplink_energy_j(ch_cfg, 1000, 8, jnp.asarray(20.0)))
+    np.testing.assert_allclose(float(total), float(K * T / N * N * per_dev),
+                               rtol=1e-5)
+
+
+def test_round_time_includes_compute_and_uplink():
+    e_cfg, ch_cfg = EnergyConfig(), ChannelConfig()
+    rates = jnp.full((100,), 20.0)
+    tau = en.round_time_s(e_cfg, ch_cfg, num_params=421_642, bits=8,
+                          local_iters=3, macs_per_iter=4_241_152.0,
+                          rates_per_device=rates, num_devices=100,
+                          devices_per_round=10)
+    tau_u = 421_642 * 8 / (10e6 * 20.0)
+    tau_c = 4_241_152 / 3.7e12 * 3
+    np.testing.assert_allclose(float(tau), 10 / 100 * 100 * (tau_u + tau_c),
+                               rtol=1e-5)

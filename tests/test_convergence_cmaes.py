@@ -1,0 +1,108 @@
+"""Convergence machinery (eq. 15-20) + from-scratch CMA-ES tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ConvergenceConfig, FLConfig
+from repro.core import cmaes, convergence as cv
+
+
+CFG = ConvergenceConfig()
+FL = FLConfig()
+
+
+def test_variance_bound_components():
+    """eq. 16 at the paper's constants (hand-computed)."""
+    E = float(cv.variance_bound_E(CFG, FL, num_params=421_642,
+                                  bits=jnp.asarray(8.0)))
+    grad_noise = 100 * 0.001 / 100 ** 2
+    hetero = 6 * 0.097 * 0.6
+    drift = (8 * 4 + 4 * 90 * 9 / (10 * 99)) * 0.25
+    quant = 4 * 421_642 * 9 * 1e-4 / (10 * 255 ** 2)
+    np.testing.assert_allclose(E, grad_noise + hetero + drift + quant, rtol=1e-5)
+
+
+def test_variance_decreases_with_bits():
+    e4 = float(cv.variance_bound_E(CFG, FL, num_params=421_642, bits=jnp.asarray(4.0)))
+    e8 = float(cv.variance_bound_E(CFG, FL, num_params=421_642, bits=jnp.asarray(8.0)))
+    e32 = float(cv.variance_bound_E(CFG, FL, num_params=421_642, bits=jnp.asarray(32.0)))
+    assert e4 > e8 > e32
+
+
+def test_rounds_increase_with_drops_and_precision_loss():
+    T_clean = float(cv.rounds_to_converge(CFG, FL, num_params=421_642,
+                                          bits=jnp.asarray(8.0), q=jnp.asarray(0.01)))
+    T_drops = float(cv.rounds_to_converge(CFG, FL, num_params=421_642,
+                                          bits=jnp.asarray(8.0), q=jnp.asarray(0.5)))
+    T_coarse = float(cv.rounds_to_converge(CFG, FL, num_params=421_642,
+                                           bits=jnp.asarray(2.0), q=jnp.asarray(0.01)))
+    assert T_drops > T_clean, "packet drops must slow convergence (eq. 17)"
+    assert T_coarse > T_clean, "coarser quantization must slow convergence"
+
+
+def test_rigorous_v_bounds_recursion():
+    """The corrected v (rigorous=True) upper-bounds the eq. 17/18 recursion."""
+    q, bits = 0.1, 8.0
+    E = cv.variance_bound_E(CFG, FL, num_params=1000, bits=jnp.asarray(bits))
+    gamma = float(cv.gamma_param(CFG, FL, jnp.asarray(q)))
+    v = float(cv.v_param(CFG, FL, E=E, q=jnp.asarray(q), rigorous=True))
+    traj = cv.bound_trajectory(CFG, FL, num_params=1000, bits=bits, q=q,
+                               rounds=300)
+    for t, d in enumerate(np.asarray(traj), start=1):
+        assert d <= v / (t + gamma) + 1e-9, f"bound violated at t={t}"
+
+
+def test_paper_v_gap_documented():
+    """REPRODUCTION FINDING: the paper's v (eq. after 18) does NOT bound the
+    recursion for q>0 — the induction needs the extra (2(1−q)−1) factor.
+    This test pins the finding: violations exist with the paper's v."""
+    q, bits = 0.1, 8.0
+    E = cv.variance_bound_E(CFG, FL, num_params=1000, bits=jnp.asarray(bits))
+    gamma = float(cv.gamma_param(CFG, FL, jnp.asarray(q)))
+    v_paper = float(cv.v_param(CFG, FL, E=E, q=jnp.asarray(q), rigorous=False))
+    traj = np.asarray(cv.bound_trajectory(CFG, FL, num_params=1000, bits=bits,
+                                          q=q, rounds=300))
+    violations = sum(1 for t, d in enumerate(traj, start=1)
+                     if d > v_paper / (t + gamma) + 1e-9)
+    assert violations > 0, "expected the paper's v to be violated for q=0.1"
+    # at q=0 the paper's v reduces to Li et al.'s and must hold
+    E0 = cv.variance_bound_E(CFG, FL, num_params=1000, bits=jnp.asarray(bits))
+    gamma0 = float(cv.gamma_param(CFG, FL, jnp.asarray(0.0)))
+    v0 = float(cv.v_param(CFG, FL, E=E0, q=jnp.asarray(0.0)))
+    traj0 = np.asarray(cv.bound_trajectory(CFG, FL, num_params=1000, bits=bits,
+                                           q=0.0, rounds=300))
+    for t, d in enumerate(traj0, start=1):
+        assert d <= v0 / (t + gamma0) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# CMA-ES
+# ---------------------------------------------------------------------------
+
+def test_cmaes_sphere():
+    res = cmaes.minimize(lambda x: float(np.sum(x ** 2)),
+                         [2.0, -1.5, 0.5], 0.5, max_iters=300, seed=0)
+    assert res.f_best < 1e-10
+    np.testing.assert_allclose(res.x_best, 0.0, atol=1e-4)
+
+
+def test_cmaes_rosenbrock():
+    ros = lambda x: float(100 * (x[1] - x[0] ** 2) ** 2 + (1 - x[0]) ** 2)
+    res = cmaes.minimize(ros, [-1.0, 1.0], 0.5, max_iters=500, seed=1)
+    assert res.f_best < 1e-8
+    np.testing.assert_allclose(res.x_best, 1.0, atol=1e-3)
+
+
+def test_cmaes_respects_box():
+    """Optimum outside the box -> solution lands on the boundary."""
+    res = cmaes.minimize(lambda x: float(np.sum((x - 5.0) ** 2)),
+                         [0.5, 0.5], 0.3, lower=[0.0, 0.0], upper=[1.0, 1.0],
+                         max_iters=200, seed=2)
+    np.testing.assert_allclose(res.x_best, 1.0, atol=1e-3)
+
+
+def test_cmaes_history_monotone():
+    res = cmaes.minimize(lambda x: float(np.sum(x ** 2)), [3.0, 3.0], 1.0,
+                         max_iters=100, seed=3)
+    f = res.history_f
+    assert (np.diff(f) <= 1e-12).all(), "best-so-far must be non-increasing"

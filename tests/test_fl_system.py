@@ -1,0 +1,137 @@
+"""End-to-end system tests: FL simulator on the paper's QNN, data pipeline,
+checkpointing, optimizers, and the joint energy optimization."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.configs.mnist_cnn import PAPER_MACS, PAPER_WEIGHTS
+from repro.core.fl import FLSimulator
+from repro.core.optimize import EnergyObjective, joint_optimize
+from repro.data.pipeline import make_federated_digits
+from repro.data.synthetic import digit_dataset, partition_dirichlet, token_batch
+from repro.models import build_model
+from repro.optim import adam, apply_updates, cosine_schedule, make_optimizer, sgd
+
+
+def _small_fl_config(**kw):
+    cfg = get_config("mnist_cnn")
+    fl = dataclasses.replace(cfg.fl, devices_per_round=3, local_iters=2,
+                             learning_rate=0.05, **kw.pop("fl", {}))
+    train = dataclasses.replace(cfg.train, global_batch=16)
+    return dataclasses.replace(cfg, fl=fl, train=train, **kw)
+
+
+def test_fl_simulator_loss_decreases():
+    cfg = _small_fl_config()
+    model = build_model(cfg)
+    store = make_federated_digits(jax.random.PRNGKey(0), num_samples=600,
+                                  num_clients=10)
+    sim = FLSimulator(model, cfg, store)
+    assert sim.num_params == PAPER_WEIGHTS
+    params = model.init(jax.random.PRNGKey(1))
+    params, hist = sim.train(params, 6, jax.random.PRNGKey(2))
+    assert hist[-1]["loss"] < hist[0]["loss"], "FL training must reduce loss"
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert hist[0]["energy_j"] > 0 and hist[0]["tau_s"] > 0
+
+
+def test_fl_simulator_error_aware_beats_naive_at_high_q():
+    """At q=0.5, eq. 6 renormalization should track eq. 5 or better."""
+    results = {}
+    for aware in (True, False):
+        cfg = _small_fl_config()
+        cfg = dataclasses.replace(
+            cfg, fl=dataclasses.replace(cfg.fl, error_aware=aware),
+            channel=dataclasses.replace(cfg.channel, error_prob=0.5))
+        model = build_model(cfg)
+        store = make_federated_digits(jax.random.PRNGKey(3), num_samples=400,
+                                      num_clients=10)
+        sim = FLSimulator(model, cfg, store)
+        params = model.init(jax.random.PRNGKey(4))
+        _, hist = sim.train(params, 5, jax.random.PRNGKey(5))
+        results[aware] = hist[-1]["loss"]
+    # both finite; error-aware no worse than 1.5x naive final loss
+    assert np.isfinite(results[True]) and np.isfinite(results[False])
+    assert results[True] <= results[False] * 1.5
+
+
+def test_dirichlet_partition_covers_all_samples():
+    labels = np.asarray(digit_dataset(jax.random.PRNGKey(6), 500)["labels"])
+    parts = partition_dirichlet(jax.random.PRNGKey(7), labels, 7, alpha=0.3)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500
+
+
+def test_token_batch_shapes_and_range():
+    b = token_batch(jax.random.PRNGKey(8), 4, 16, 100)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    assert int(b["tokens"].max()) < 100 and int(b["tokens"].min()) >= 0
+    np.testing.assert_array_equal(np.asarray(b["labels"][:, :-1]),
+                                  np.asarray(b["tokens"][:, 1:]))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": [jnp.ones((2,), jnp.bfloat16),
+                       {"step": jnp.asarray(7, jnp.int32)}]}
+    d = str(tmp_path)
+    save_checkpoint(d, 10, tree)
+    save_checkpoint(d, 20, tree)
+    assert latest_step(d) == 20
+    restored = restore_checkpoint(d, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_retention(tmp_path):
+    d = str(tmp_path)
+    for s in range(6):
+        save_checkpoint(d, s, {"x": jnp.zeros(1)}, keep=3)
+    files = sorted(os.listdir(d))
+    assert len(files) == 3 and "ckpt_5.msgpack" in files
+
+
+def test_sgd_and_adam_converge_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    loss = lambda p: jnp.sum((p["x"] - target) ** 2)
+    for opt in (sgd(0.1), sgd(0.1, momentum=0.9), adam(0.1)):
+        params = {"x": jnp.zeros(3)}
+        state = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            upd, state = opt.update(g, state, params)
+            params = apply_updates(params, upd)
+        np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(target),
+                                   atol=1e-2)
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(sched(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(sched(jnp.asarray(100))) <= 0.11
+
+
+def test_joint_energy_optimization_matches_paper_trends():
+    """CMA-ES drives q -> 0.01 (paper Fig. 2b) and the energy at the optimum
+    is far below the non-quantized baseline (Fig. 4 trend)."""
+    cfg = get_config("mnist_cnn")
+    res = joint_optimize(cfg, num_params=PAPER_WEIGHTS,
+                         macs_per_iter=PAPER_MACS, max_iters=60, seed=0)
+    assert res.q <= 0.05, f"q* should approach 0.01, got {res.q}"
+    assert 0.1 <= res.p_tx <= 2.0
+    assert res.tau_pr_s <= cfg.fl.tau_limit_s
+    e32 = res.per_bits[32]["energy_j"]
+    e8 = res.per_bits[8]["energy_j"]
+    saving = 1 - e8 / e32
+    assert saving >= 0.70, f"FP8 should save ~75% vs FP32, got {saving:.2%}"

@@ -1,0 +1,93 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+
+Every Pallas kernel runs in interpret mode on CPU; assert_allclose against
+ref.py is the correctness gate required for each kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.aggregate import masked_aggregate
+from repro.kernels.qmatmul import qmatmul
+from repro.kernels.quantize import dequantize_codes, stochastic_quantize_codes
+
+SHAPES_1D = [(17,), (1000,), (421_642,)]          # incl. the paper's QNN size
+SHAPES_ND = [(7, 333), (4, 128, 130), (3, 5, 7, 11)]
+
+
+@pytest.mark.parametrize("shape", SHAPES_1D + SHAPES_ND)
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_quantize_kernel_matches_ref(shape, bits):
+    x = jax.random.uniform(jax.random.PRNGKey(0), shape, minval=-1.5, maxval=1.5)
+    u = jax.random.uniform(jax.random.PRNGKey(1), shape)
+    got = stochastic_quantize_codes(x, u, bits, interpret=True)
+    want = ref.stochastic_quantize_ref(x, u, bits)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+@pytest.mark.parametrize("stochastic", [True, False])
+def test_quantize_kernel_rounding_modes(bits, stochastic):
+    x = jax.random.normal(jax.random.PRNGKey(2), (5000,))
+    u = jax.random.uniform(jax.random.PRNGKey(3), (5000,))
+    got = stochastic_quantize_codes(x, u, bits, stochastic=stochastic,
+                                    interpret=True)
+    want = ref.stochastic_quantize_ref(x, u, bits, stochastic=stochastic)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(999,), (64, 100)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_dequantize_kernel_matches_ref(shape, bits):
+    g = 2 ** (bits - 1)
+    codes = jax.random.randint(jax.random.PRNGKey(4), shape, -g, g, jnp.int32)
+    got = dequantize_codes(codes, bits, interpret=True)
+    want = ref.dequantize_ref(codes, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-7)
+
+
+def test_quantize_roundtrip_through_ops():
+    x = jax.random.uniform(jax.random.PRNGKey(5), (2048,), minval=-0.99,
+                           maxval=0.99)
+    q = ops.stochastic_quantize(x, jax.random.PRNGKey(6), 8)
+    assert float(jnp.abs(q - x).max()) <= 1.0 / 128 + 1e-6
+
+
+@pytest.mark.parametrize("mnk", [(64, 200, 96), (128, 128, 128),
+                                 (300, 257, 130), (1, 17, 1), (512, 384, 256)])
+def test_qmatmul_matches_ref(mnk):
+    M, K, N = mnk
+    xq = jax.random.randint(jax.random.PRNGKey(7), (M, K), -128, 128, jnp.int8)
+    wq = jax.random.randint(jax.random.PRNGKey(8), (K, N), -128, 128, jnp.int8)
+    got = qmatmul(xq, wq, jnp.float32(0.01), jnp.float32(0.02), interpret=True)
+    want = ref.qmatmul_ref(xq, wq, 0.01, 0.02)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_qmatmul_exact_integer_accumulation():
+    """int8 matmul must be bit-exact (no float accumulation error)."""
+    K = 4096  # long K: float32 accumulation of int products would drift
+    xq = jnp.full((8, K), 127, jnp.int8)
+    wq = jnp.full((K, 8), 127, jnp.int8)
+    got = qmatmul(xq, wq, jnp.float32(1.0), jnp.float32(1.0), interpret=True)
+    assert float(got[0, 0]) == 127 * 127 * K
+
+
+@pytest.mark.parametrize("kd", [(10, 421_642), (3, 100), (16, 5000), (1, 2048)])
+def test_aggregate_kernel_sweep(kd):
+    K, D = kd
+    upd = jax.random.normal(jax.random.PRNGKey(9), (K, D))
+    w = jax.random.uniform(jax.random.PRNGKey(10), (K,))
+    got = masked_aggregate(upd, w, interpret=True)
+    want = ref.masked_aggregate_ref(upd, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_aggregate_kernel_zero_weights():
+    upd = jax.random.normal(jax.random.PRNGKey(11), (4, 100))
+    got = masked_aggregate(upd, jnp.zeros((4,)), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 0.0)

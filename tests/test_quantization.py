@@ -1,0 +1,117 @@
+"""Property-style sweeps for the stochastic quantizer (paper §II-A/B).
+
+hypothesis is unavailable offline; these tests sweep randomized
+(shape, bits, seed) grids and assert the paper-relevant invariants:
+unbiasedness, bounded error, idempotence of the code grid, and the
+variance bound used in eq. 16.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QuantConfig
+from repro.core import quantization as Q
+
+BITS = [2, 4, 8, 12, 16]
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_codes_in_signed_range(bits, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (4097,)) * 3.0  # exceeds clip on purpose
+    codes = Q.quantize_codes(x, jax.random.PRNGKey(seed + 10), bits)
+    g = 2 ** (bits - 1)
+    assert int(codes.min()) >= -g
+    assert int(codes.max()) <= g - 1
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quantization_error_bounded_by_step(bits):
+    key = jax.random.PRNGKey(3)
+    # stay inside the representable range [-1, (G-1)/G]
+    g = 2.0 ** (bits - 1)
+    x = jax.random.uniform(key, (8192,), minval=-1.0, maxval=(g - 1) / g)
+    q = Q.quantize(x, jax.random.PRNGKey(4), QuantConfig(bits=bits))
+    step = 1.0 / g
+    assert float(jnp.abs(q - x).max()) <= step + 1e-6
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_stochastic_rounding_unbiased(bits):
+    """E[Q(x)] == x away from saturation (the paper's [-1,1) format)."""
+    g = 2.0 ** (bits - 1)
+    x = jax.random.uniform(jax.random.PRNGKey(5), (2000,),
+                           minval=-1.0, maxval=(g - 1) / g)
+    cfg = QuantConfig(bits=bits)
+    n_draws = 256
+    keys = jax.random.split(jax.random.PRNGKey(6), n_draws)
+    qs = jnp.stack([Q.quantize(x, k, cfg) for k in keys])
+    bias = jnp.abs(qs.mean(0) - x)
+    # per-draw err <= step; mean-of-256 std <= step/(2 sqrt 256); 6 sigma slack
+    tol = (1.0 / g) / (2 * np.sqrt(n_draws)) * 6
+    assert float(bias.max()) <= tol
+
+
+def test_nearest_rounding_is_deterministic():
+    x = jax.random.normal(jax.random.PRNGKey(7), (1000,))
+    cfg = QuantConfig(bits=8, stochastic=False)
+    q1 = Q.quantize(x, jax.random.PRNGKey(1), cfg)
+    q2 = Q.quantize(x, jax.random.PRNGKey(2), cfg)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_grid_idempotent(bits):
+    """Quantizing an already-on-grid value is exact under nearest rounding.
+
+    (Under stochastic rounding an exact grid point can flip one step up with
+    probability ~ulp when u -> 1 in f32 — inherent, so tested with tolerance.)
+    """
+    g = 2 ** (bits - 1)
+    codes = jnp.arange(-g, g, dtype=jnp.int32)
+    x = Q.dequantize_codes(codes, bits)
+    q = Q.quantize(x, jax.random.PRNGKey(8), QuantConfig(bits=bits,
+                                                         stochastic=False))
+    np.testing.assert_allclose(np.asarray(q), np.asarray(x), atol=1e-7)
+    q_st = Q.quantize(x, jax.random.PRNGKey(8), QuantConfig(bits=bits))
+    assert float(jnp.abs(q_st - x).max()) <= 1.0 / g + 1e-7
+
+
+def test_variance_bound():
+    """Empirical Var[Q(x)] <= step^2/4 (the eq. 16 quantization term)."""
+    bits = 4
+    x = jax.random.uniform(jax.random.PRNGKey(9), (500,), minval=-0.9, maxval=0.9)
+    cfg = QuantConfig(bits=bits)
+    keys = jax.random.split(jax.random.PRNGKey(10), 512)
+    qs = jnp.stack([Q.quantize(x, k, cfg) for k in keys])
+    var = jnp.var(qs, axis=0)
+    bound = Q.quantization_variance_bound(bits)
+    assert float(var.max()) <= bound * 1.15  # finite-sample slack
+
+
+def test_tree_quantization_and_payload():
+    tree = {"a": jnp.ones((10, 3)) * 0.3, "b": [jnp.zeros((7,))]}
+    cfg = QuantConfig(bits=8)
+    qt = Q.quantize_tree(tree, jax.random.PRNGKey(11), cfg)
+    assert jax.tree_util.tree_structure(qt) == jax.tree_util.tree_structure(tree)
+    codes = Q.quantize_tree_codes(tree, jax.random.PRNGKey(11), cfg)
+    deq = Q.dequantize_tree_codes(codes, cfg)
+    for l in jax.tree_util.tree_leaves(deq):
+        assert l.dtype == jnp.float32
+    assert Q.payload_bits(421_642, 8) == 3_373_136
+
+
+def test_ste_gradient_identity_inside_clip():
+    """Fake-quant STE: dL/dx == pass-through inside [-clip, clip], 0 outside."""
+    x = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+    g = jax.grad(lambda v: jnp.sum(
+        Q.fake_quant_ste(v, jax.random.PRNGKey(0), 8, 1.0, True) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), [0.0, 3.0, 3.0, 3.0, 0.0])
+
+
+def test_disabled_quantization_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(12), (100,))
+    q = Q.quantize(x, jax.random.PRNGKey(13), QuantConfig(bits=0))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
