@@ -1,11 +1,20 @@
-"""Collective-payload comparison: paper-faithful f32 wire vs the beyond-paper
-integer-code wire (quantized psum), lowered on an 8-device debug mesh.
+"""Collective-payload comparison across all three wire formats:
+
+  paper  — f32 psum (faithful; n-bit payload simulated only)
+  int    — integer codes in the smallest int container (int8/16/32)
+  packed — codes bit-packed into dense uint32 words (wire ≈ payload_bits)
+
+Each mode is lowered on an 8-device debug mesh and the post-SPMD HLO's
+collective bytes are parsed; the per-mode bytes land in
+``BENCH_collective_modes.json`` next to this file so the wire-size
+trajectory is tracked across PRs.
 
 Runs in a subprocess so the forced device count never leaks into other
 benchmarks (the brief: only the dry-run sees >1 device globally).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -13,30 +22,35 @@ import textwrap
 
 from benchmarks.common import emit
 
+MODES = ("paper", "int", "packed")
+OUT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_collective_modes.json")
+
 CODE = """
-import dataclasses, time, jax, jax.numpy as jnp
+import dataclasses, json, time, jax, jax.numpy as jnp
 from repro.configs import get_config, reduced
 from repro.models import build_model
 from repro.core.fl import make_fl_round
 from repro.data.synthetic import token_batch
+from repro.utils.compat import make_mesh, set_mesh
 from repro.utils.hlo import collective_bytes
 
-mesh = jax.make_mesh((2,4), ("data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2,4), ("data","model"))
 cfg = reduced(get_config("olmo-1b"))
 model = build_model(cfg)
 batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
 p = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
 out = {}
-with jax.set_mesh(mesh):
-    for mode in ("paper", "int"):
+with set_mesh(mesh):
+    for mode in ("paper", "int", "packed"):
         t0 = time.perf_counter()
         f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
         txt = f.lower(p, batch, rng).compile().as_text()
         cb = collective_bytes(txt)
-        out[mode] = (cb["total"], (time.perf_counter()-t0)*1e6)
-print("RESULT", out["paper"][0], out["int"][0], out["paper"][1], out["int"][1])
+        out[mode] = {"collective_bytes": cb["total"],
+                     "lower_compile_us": (time.perf_counter()-t0)*1e6}
+print("RESULT " + json.dumps(out))
 """
 
 
@@ -50,12 +64,20 @@ def run() -> None:
         emit("collective_modes", 0.0, f"FAIL:{r.stderr[-160:]}")
         return
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
-    _, cb_paper, cb_int, us_p, us_i = line.split()
-    reduction = 1.0 - float(cb_int) / float(cb_paper)
-    emit("collective_paper_f32_wire", float(us_p),
-         f"collective_bytes={cb_paper}")
-    emit("collective_int_wire", float(us_i),
-         f"collective_bytes={cb_int};reduction_vs_paper={reduction:.2%}")
+    res = json.loads(line[len("RESULT "):])
+
+    cb_paper = res["paper"]["collective_bytes"]
+    for mode in MODES:
+        cb = res[mode]["collective_bytes"]
+        reduction = 1.0 - cb / cb_paper
+        emit(f"collective_{mode}_wire", res[mode]["lower_compile_us"],
+             f"collective_bytes={cb};reduction_vs_paper={reduction:.2%}")
+
+    record = {"arch": "olmo-1b (reduced)", "mesh": [2, 4],
+              "bytes_per_mode": {m: res[m]["collective_bytes"] for m in MODES}}
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    emit("collective_modes_json", 0.0, f"wrote={os.path.basename(OUT_JSON)}")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ REGISTRY = {
              "benchmarks.fig4_energy"),
     "kernels": ("Pallas kernel microbenches vs ref.py",
                 "benchmarks.kernels_micro"),
-    "collectives": ("paper f32 wire vs quantized int wire (beyond-paper)",
+    "collectives": ("wire formats: paper f32 vs int codes vs bit-packed u32",
                     "benchmarks.collective_modes"),
     "roofline": ("roofline table from dry-run artifacts",
                  "benchmarks.roofline_report"),

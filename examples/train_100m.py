@@ -18,7 +18,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--collective", default="int", choices=["paper", "int"])
+    ap.add_argument("--collective", default="int", choices=["paper", "int", "packed"])
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
     os.environ["XLA_FLAGS"] = (
@@ -36,6 +36,7 @@ def main():
     from repro.models import build_model
     from repro.sharding import rules as rules_mod
     from repro.sharding.context import use_sharding_rules
+    from repro.utils import compat
 
     # ~100M params: 12L x d768 x ff3072, 16k vocab (olmo family)
     cfg = apply_overrides(get_config("olmo-1b"), (
@@ -56,7 +57,7 @@ def main():
     assert kind == "fl_round"
     p_shardings = rules_mod.param_shardings(model, cfg, mesh)
 
-    with jax.set_mesh(mesh), use_sharding_rules(mesh):
+    with compat.set_mesh(mesh), use_sharding_rules(mesh):
         params = jax.jit(model.init, out_shardings=p_shardings)(
             jax.random.PRNGKey(0))
         jitted = jax.jit(step_fn, in_shardings=(p_shardings, None, None),

@@ -183,6 +183,11 @@ class QuantConfig:
     quantize_training: bool = True  # quantize weights during local training (QNN)
     quantize_uplink: bool = True    # quantize the transmitted delta
     use_pallas: bool = False        # route through the Pallas kernel (interpret on CPU)
+    # what the distributed collective puts on the wire (make_fl_round default):
+    #   "f32"    — paper-faithful float psum (n-bit payload simulated only)
+    #   "int"    — integer codes in the smallest int container (int8/16/32)
+    #   "packed" — codes bit-packed into dense uint32 words (wire ≈ payload_bits)
+    wire_format: str = "f32"
 
     @property
     def enabled(self) -> bool:

@@ -6,14 +6,34 @@ Two runtimes share the same math:
   sampling, I local QAT-SGD steps per client (eq. 4, STE fake-quant), uplink
   delta quantization, Bernoulli packet drops, error-aware aggregation
   (eq. 6), and per-round energy/latency from the §II-D model.  vmap over the
-  K selected clients; runs on one CPU device.
+  K selected clients; runs on one CPU device.  The hot path is
+  ``run_rounds`` — one jitted ``lax.scan`` over rounds (telemetry stacked,
+  identical PRNG chain to looping ``run_round``) — which ``train`` and the
+  multi-round benchmarks ride.
 
-* ``make_fl_train_step`` — the production mapping: one client cohort per
+* ``make_fl_round`` — the production mapping: one client cohort per
   (``pod``, ``data``) mesh shard, model tensor-parallel over ``model``
-  (GSPMD auto axes inside ``shard_map``).  Each cohort runs I local SGD
-  steps, quantizes its delta, survives with prob. 1−q, and the cohorts
-  aggregate with a (optionally integer-payload) psum — the paper's uplink as
-  a collective.
+  (GSPMD auto axes inside ``shard_map`` where the jax version supports
+  partial-manual lowering; replicated on the 0.4.37 floor).  Each cohort
+  runs I local SGD steps, quantizes its delta, survives with prob. 1−q, and
+  the cohorts aggregate with a psum whose WIRE FORMAT is selectable —
+  ``collective=`` or ``QuantConfig.wire_format``:
+
+    "paper"/"f32"  f32 psum.  32 wire bits/param; the paper's n-bit uplink
+                   payload (§II-D2 ``payload_bits`` = d·n) is simulated in
+                   the energy model but not realised on the wire.
+    "int"          integer codes in the smallest int container that holds
+                   the shard sum (int8/16/32) — 8-32 wire bits/param.
+    "packed"       codes bit-packed into dense uint32 words with
+                   ceil(log2(K)) guard bits per lane so ONE u32 psum sums
+                   every lane carry-free — 32/⌊32/(n+⌈log2 K⌉)⌋ wire
+                   bits/param, e.g. 10.7 at n=8, K=2.  This makes the HLO
+                   collective bytes track the paper's payload-bits
+                   accounting (the energy model's d·n) instead of
+                   overshooting it 2-4x.
+
+  See ``aggregation.py`` for the three collective implementations and
+  ``quantization.pack_codes`` / ``kernels/pack.py`` for the wire format.
 """
 from __future__ import annotations
 
@@ -30,6 +50,7 @@ from repro.core import aggregation as agg
 from repro.core import channel as ch
 from repro.core import energy as energy_mod
 from repro.core import quantization as quant
+from repro.utils import compat
 
 PyTree = Any
 
@@ -61,6 +82,7 @@ class FLSimulator:
                 jax.eval_shape(model.init, jax.random.PRNGKey(0)))))
         self.macs = macs_per_iter or config.energy.macs_per_iteration
         self._round_fn = jax.jit(self._round)
+        self._scan_fns: Dict[Any, Callable] = {}
 
     # -- one client: I local steps of quantized SGD (eq. 4) -------------------
 
@@ -104,7 +126,12 @@ class FLSimulator:
 
     # -- public API -------------------------------------------------------------
 
-    def run_round(self, params, rng) -> Tuple[PyTree, RoundTelemetry]:
+    def _round_inputs(self, rng):
+        """Host-side per-round prep: client sampling + minibatch stacking.
+
+        Returns (stacked_batches with (K, I, B, ...) leaves, client_alphas,
+        k_run) — the exact inputs of the jitted ``_round``.
+        """
         fl = self.config.fl
         k_sel, k_data, k_run = jax.random.split(rng, 3)
         clients = np.asarray(jax.random.choice(
@@ -121,12 +148,62 @@ class FLSimulator:
             *[jax.tree_util.tree_map(lambda *l: jnp.stack(l), *bs)
               for bs in batches])
         client_alphas = self.alphas[jnp.asarray(clients)]
+        return stacked, client_alphas, k_run
 
+    def run_round(self, params, rng) -> Tuple[PyTree, RoundTelemetry]:
+        stacked, client_alphas, k_run = self._round_inputs(rng)
         new_params, loss, acc, surv = self._round_fn(params, stacked,
                                                      client_alphas, k_run)
         e, tau = self.round_energy()
         return new_params, RoundTelemetry(float(loss), float(acc),
                                           int(surv), e, tau)
+
+    def _scan_fn(self, eval_fn: Optional[Callable]) -> Callable:
+        """Jitted lax.scan over rounds; one compile per eval_fn identity."""
+        key = eval_fn
+        if key not in self._scan_fns:
+
+            def body(params, xs):
+                batches, alphas, k = xs
+                new_params, loss, acc, surv = self._round(params, batches,
+                                                          alphas, k)
+                metric = eval_fn(new_params) if eval_fn is not None else acc
+                return new_params, (loss, metric, surv)
+
+            self._scan_fns[key] = jax.jit(
+                lambda p, xs: jax.lax.scan(body, p, xs))
+        return self._scan_fns[key]
+
+    def run_rounds(self, params, rounds: int, rng, *,
+                   eval_fn: Optional[Callable] = None, start_round: int = 0,
+                   return_rng: bool = False):
+        """Jitted multi-round driver: one ``lax.scan`` over ``rounds``.
+
+        Exactly reproduces ``rounds`` successive :meth:`run_round` calls —
+        the same per-round PRNG chain (rng, k = split(rng)), client
+        sampling and minibatch streams — but runs the whole sweep as one
+        compiled scan, so multi-round benchmarks pay one dispatch instead
+        of ``rounds``.  Telemetry comes back stacked and is expanded into
+        the same per-round history dicts ``train`` produces; ``eval_fn``
+        (a jit-able params -> scalar metric) is folded into the scan body.
+        """
+        if rounds <= 0:
+            return (params, [], rng) if return_rng else (params, [])
+        per_round = []
+        for _ in range(rounds):
+            rng, k = jax.random.split(rng)
+            per_round.append(self._round_inputs(k))
+        xs = jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves),
+                                    *per_round)
+        params, (losses, metrics, survs) = self._scan_fn(eval_fn)(params, xs)
+        e, tau = self.round_energy()
+        history = [{"round": start_round + t, "loss": float(losses[t]),
+                    "accuracy": float(metrics[t]),
+                    "survivors": int(survs[t]), "energy_j": e, "tau_s": tau}
+                   for t in range(rounds)]
+        if return_rng:
+            return params, history, rng
+        return params, history
 
     def round_energy(self) -> Tuple[float, float]:
         """Expected per-round energy (J) and latency (s) at the operating point."""
@@ -151,22 +228,35 @@ class FLSimulator:
         return float(e), float(tau)
 
     def train(self, params, rounds: int, rng, *, target_accuracy: float = 0.0,
-              eval_fn: Optional[Callable] = None, log_every: int = 0):
-        """Run rounds until ``rounds`` or target accuracy; returns history."""
+              eval_fn: Optional[Callable] = None, log_every: int = 0,
+              chunk_rounds: int = 0):
+        """Run rounds until ``rounds`` or target accuracy; returns history.
+
+        The hot path is the jitted :meth:`run_rounds` scan.  Without an
+        early-stop target the whole sweep is one scan; with one, rounds run
+        in ``chunk_rounds`` chunks (default 1, preserving the exact
+        round-granular stop of the per-round loop) and stop as soon as the
+        target metric is reached.
+        """
         history = []
-        for t in range(rounds):
-            rng, k = jax.random.split(rng)
-            params, tel = self.run_round(params, k)
-            metric = tel.accuracy
-            if eval_fn is not None:
-                metric = float(eval_fn(params))
-            history.append({"round": t, "loss": tel.loss, "accuracy": metric,
-                            "survivors": tel.survivors, "energy_j": tel.energy_j,
-                            "tau_s": tel.tau_s})
-            if log_every and t % log_every == 0:
-                print(f"  round {t:4d} loss={tel.loss:.4f} acc={metric:.4f} "
-                      f"survivors={tel.survivors}")
-            if target_accuracy and metric >= target_accuracy:
+        chunk = chunk_rounds or (1 if target_accuracy else rounds)
+        t = 0
+        while t < rounds:
+            n = min(chunk, rounds - t)
+            params, hist, rng = self.run_rounds(params, n, rng,
+                                                eval_fn=eval_fn,
+                                                start_round=t,
+                                                return_rng=True)
+            history.extend(hist)
+            if log_every:
+                for h in hist:
+                    if h["round"] % log_every == 0:
+                        print(f"  round {h['round']:4d} loss={h['loss']:.4f} "
+                              f"acc={h['accuracy']:.4f} "
+                              f"survivors={h['survivors']}")
+            t += n
+            if target_accuracy and any(h["accuracy"] >= target_accuracy
+                                       for h in hist):
                 break
         return params, history
 
@@ -180,12 +270,29 @@ def fl_data_axes(mesh, config: Optional[Config] = None) -> Tuple[str, ...]:
     return tuple(a for a in wanted if a in mesh.shape)
 
 
+_WIRE_TO_COLLECTIVE = {"f32": "paper", "int": "int", "packed": "packed"}
+
+
+def resolve_collective(config: Config, collective: Optional[str]) -> str:
+    """Explicit ``collective`` wins; else ``config.quant.wire_format``."""
+    if collective is None:
+        collective = _WIRE_TO_COLLECTIVE.get(config.quant.wire_format)
+        if collective is None:
+            raise ValueError(
+                f"unknown quant.wire_format {config.quant.wire_format!r}; "
+                f"expected one of {sorted(_WIRE_TO_COLLECTIVE)}")
+    if collective not in ("paper", "int", "packed"):
+        raise ValueError(f"unknown collective {collective!r}")
+    return collective
+
+
 def make_fl_round(model, config: Config, mesh, *,
-                  collective: str = "paper") -> Optional[Callable]:
+                  collective: Optional[str] = None) -> Optional[Callable]:
     """Build the jit-able distributed FL round.
 
-    collective: "paper" (f32 wire, faithful) | "int" (integer-code wire,
-    beyond-paper optimization).
+    collective: "paper" (f32 wire, faithful) | "int" (integer-code wire)
+    | "packed" (bit-packed uint32 wire, matching the paper's payload_bits
+    accounting) | None (the default — resolve ``config.quant.wire_format``).
 
     Returned fn: (params, batch, rng) -> (params, metrics).
     ``batch`` leaves are (global_batch, ...) sharded over the data axes;
@@ -193,6 +300,7 @@ def make_fl_round(model, config: Config, mesh, *,
     """
     fl = config.fl
     qcfg = config.quant
+    collective = resolve_collective(config, collective)
     axes = fl_data_axes(mesh, config)
     if not axes:
         # no cohort axis on this mesh (e.g. FSDP arch on a single pod):
@@ -233,6 +341,9 @@ def make_fl_round(model, config: Config, mesh, *,
         if collective == "int":
             agg_delta = agg.quantized_psum_aggregate(delta, alpha, lam, qcfg,
                                                      k_q, axes, num_shards)
+        elif collective == "packed":
+            agg_delta = agg.packed_psum_aggregate(delta, alpha, lam, qcfg,
+                                                  k_q, axes, num_shards)
         else:
             agg_delta = agg.psum_aggregate(delta, alpha, lam, qcfg, k_q, axes)
 
@@ -243,7 +354,7 @@ def make_fl_round(model, config: Config, mesh, *,
         return new_params, {"loss": mean_loss, "survivors": survivors}
 
     batch_spec = jax.sharding.PartitionSpec(axes if len(axes) > 1 else axes[0])
-    shmapped = jax.shard_map(
+    shmapped = compat.shard_map(
         local_round, mesh=mesh,
         in_specs=(jax.sharding.PartitionSpec(),
                   jax.tree_util.tree_map(lambda _: batch_spec,

@@ -13,10 +13,19 @@ n-bit containment is requested).
 
 All functions are pure jnp and jit/vmap/pjit friendly; ``use_pallas`` routes
 through the Pallas TPU kernel (validated in interpret mode on CPU).
+
+Beyond the paper's math, this module owns the *wire format*: ``pack_codes``
+/ ``unpack_codes`` lay n-bit codes into dense uint32 words (32//n codes per
+word, planar bit-lanes) so the simulated collective payload matches the
+paper's §II-D2 ``payload_bits`` accounting instead of shipping one int16/32
+container per parameter.  See ``packed_payload_bits`` for the exact wire
+size and ``repro.kernels.pack`` for the fused Pallas quantize-and-pack /
+unpack-and-dequantize kernel pair.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Tuple
 
 import jax
@@ -93,6 +102,95 @@ def quantize_tree_codes(tree: PyTree, key: jax.Array, cfg: QuantConfig) -> PyTre
 def dequantize_tree_codes(codes: PyTree, cfg: QuantConfig, dtype=jnp.float32) -> PyTree:
     return jax.tree_util.tree_map(
         lambda c: dequantize_codes(c, cfg.bits, clip=cfg.clip, dtype=dtype), codes)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing: n-bit codes -> dense uint32 words (the wire format).
+#
+# Codes in [-G, G-1] are biased to unsigned [0, 2^bits-1] and laid out
+# *planar*: the flat code vector (padded to cpw·W, W = ceil(n/cpw)) is viewed
+# as (cpw, W) planes and plane j occupies bit-lane [j·lane, (j+1)·lane) of
+# word w.  ``lane_bits`` defaults to ``bits`` (pure storage packing); an
+# aggregating collective passes ``bits + ceil(log2(num_shards))`` so that a
+# psum of packed words accumulates every bit-lane without cross-lane carries
+# — the per-bit-lane partial-sum trick that keeps the packed dtype on the
+# wire (see aggregation.packed_psum_aggregate).
+# ---------------------------------------------------------------------------
+
+
+def packed_lane_bits(bits: int, num_shards: int = 1) -> int:
+    """Bit-lane width so a sum over ``num_shards`` biased codes cannot carry."""
+    guard = math.ceil(math.log2(num_shards)) if num_shards > 1 else 0
+    return bits + guard
+
+
+def codes_per_word(bits: int, *, lane_bits: int = 0) -> int:
+    """How many codes one uint32 word holds at the given lane width."""
+    lane = lane_bits or bits
+    if lane > 32:
+        raise ValueError(f"lane width {lane} exceeds the 32-bit container")
+    return 32 // lane
+
+
+def packed_words(n: int, bits: int, *, lane_bits: int = 0) -> int:
+    """Number of uint32 words packing ``n`` codes."""
+    return -(-int(n) // codes_per_word(bits, lane_bits=lane_bits))
+
+
+def pack_codes(codes: jax.Array, bits: int, *, lane_bits: int = 0) -> jax.Array:
+    """Pack int32 codes in [-G, G-1] into a flat uint32 word vector.
+
+    Padding lanes (beyond ``codes.size``) hold 0 — NOT the biased zero code —
+    so unpack can distinguish them and packed buffers compare bit-exactly
+    across implementations (the Pallas kernel masks identically).
+    """
+    lane = lane_bits or bits
+    cpw = codes_per_word(bits, lane_bits=lane)
+    g = int(2 ** (bits - 1))
+    n = codes.size
+    W = packed_words(n, bits, lane_bits=lane)
+    biased = (codes.reshape(-1).astype(jnp.int32) + g).astype(jnp.uint32)
+    biased = jnp.pad(biased, (0, cpw * W - n)).reshape(cpw, W)
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane)[:, None]
+    return jnp.sum(biased << shifts, axis=0, dtype=jnp.uint32)
+
+
+def unpack_codes(packed: jax.Array, bits: int, size: int, *,
+                 lane_bits: int = 0, sum_of: int = 1) -> jax.Array:
+    """Inverse of :func:`pack_codes`: uint32 words -> int32 codes (flat).
+
+    ``sum_of`` = number of packed buffers summed into ``packed`` (each summand
+    contributes one +G bias per lane); 1 for a plain round-trip, the shard
+    count when unpacking an aggregated psum of packed words.
+    """
+    lane = lane_bits or bits
+    cpw = codes_per_word(bits, lane_bits=lane)
+    g = int(2 ** (bits - 1))
+    W = packed.size
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane)[:, None]
+    mask = jnp.uint32(2 ** lane - 1)
+    lanes = (packed.reshape(1, W) >> shifts) & mask            # (cpw, W)
+    flat = lanes.reshape(-1)[: int(size)]
+    return flat.astype(jnp.int32) - g * int(sum_of)
+
+
+def pack_tree_codes(codes: PyTree, cfg: QuantConfig, *,
+                    lane_bits: int = 0) -> PyTree:
+    """Pack every integer-code leaf (what crosses the packed wire)."""
+    return jax.tree_util.tree_map(
+        lambda c: pack_codes(c, cfg.bits, lane_bits=lane_bits), codes)
+
+
+def packed_payload_bits(num_params: int, bits: int, *,
+                        num_shards: int = 1) -> int:
+    """Actual wire bits of the packed uplink: 32 · ceil(d / cpw).
+
+    Approaches the ideal ``payload_bits`` d·n as d grows (exact when
+    lane_bits == bits and cpw | d); the guard lanes for an aggregating psum
+    add the ceil(log2(K)) per-lane overhead.
+    """
+    lane = packed_lane_bits(bits, num_shards)
+    return 32 * packed_words(num_params, bits, lane_bits=lane)
 
 
 def quantization_variance_bound(bits: int, clip: float = 1.0) -> float:

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import aggregate as _agg
+from repro.kernels import pack as _pack
 from repro.kernels import qmatmul as _qmm
 from repro.kernels import quantize as _quant
 
@@ -33,6 +34,24 @@ def stochastic_quantize(x: jax.Array, key: jax.Array, bits: int, *,
 
 def dequantize_codes(codes: jax.Array, bits: int, *, clip: float = 1.0) -> jax.Array:
     return _quant.dequantize_codes(codes, bits, clip=clip, interpret=_INTERPRET)
+
+
+def quantize_pack(x: jax.Array, key: jax.Array, bits: int, *,
+                  clip: float = 1.0, lane_bits: int = 0,
+                  stochastic: bool = True) -> jax.Array:
+    """Fused quantize+pack through the kernel: x -> uint32 wire words."""
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    return _pack.quantize_pack(x, u, bits, clip=clip, lane_bits=lane_bits,
+                               stochastic=stochastic, interpret=_INTERPRET)
+
+
+def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,
+                      clip: float = 1.0, lane_bits: int = 0,
+                      sum_of: int = 1) -> jax.Array:
+    """Fused unpack+dequantize through the kernel: wire words -> flat f32."""
+    return _pack.unpack_dequantize(packed, bits, size, clip=clip,
+                                   lane_bits=lane_bits, sum_of=sum_of,
+                                   interpret=_INTERPRET)
 
 
 def qmatmul(x_q: jax.Array, w_q: jax.Array, sx, sw) -> jax.Array:

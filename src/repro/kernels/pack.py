@@ -1,0 +1,140 @@
+"""Pallas TPU kernels: fused quantize-and-pack / unpack-and-dequantize.
+
+The packed wire format (see ``repro.core.quantization.pack_codes``) lays
+biased n-bit codes planar into uint32 words: plane j of the flat code vector
+occupies bit-lane [j·lane, (j+1)·lane) of word w.  The fused kernels do the
+whole hot transform in one VMEM pass:
+
+  quantize_pack:     f32 x, u  ->  scale, stochastic-round, clip, bias,
+                                   shift-OR into uint32 words
+  unpack_dequantize: uint32    ->  per-lane extract, un-bias, scale to f32
+
+Blocks are (cpw, BLOCK_ROWS, 128) for the planar operands against
+(BLOCK_ROWS, 128) word blocks — the planes of one word block ride in the
+same grid step, so packing is a pure VPU shift/or with no cross-block
+traffic.  Random bits stream in as an operand (threefry outside) exactly as
+in ``kernels/quantize.py``; interpret mode keeps CPU parity with ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# (cpw, 128, 128) f32 x/u blocks stay <= 2 MB VMEM even at cpw=16 (bits=2).
+BLOCK_ROWS = 128
+LANES = 128
+
+
+def _quantize_pack_kernel(x_ref, u_ref, words_ref, *, gain: float, g: int,
+                          lane: int, cpw: int, n: int, W: int,
+                          stochastic: bool):
+    x = x_ref[...].astype(jnp.float32)                    # (cpw, BR, LANES)
+    xq = jnp.clip(x, -1.0, 1.0) * gain   # clip interval folded into gain
+    if stochastic:
+        rounded = jnp.floor(xq + u_ref[...])
+    else:
+        rounded = jnp.round(xq)
+    codes = jnp.clip(rounded, -g, g - 1).astype(jnp.int32)
+
+    shape = x.shape                                        # (cpw, BR, LANES)
+    row = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    plane = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    w = (pl.program_id(0) * shape[1] + row) * shape[2] + col   # word index
+    valid = (w < W) & (plane * W + w < n)                  # real elements only
+    biased = jnp.where(valid, codes + g, 0).astype(jnp.uint32)
+
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane).reshape(cpw, 1, 1)
+    words_ref[...] = jnp.sum(biased << shifts, axis=0, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "clip", "lane_bits",
+                                             "stochastic", "interpret"))
+def quantize_pack(x: jax.Array, u: jax.Array, bits: int, *, clip: float = 1.0,
+                  lane_bits: int = 0, stochastic: bool = True,
+                  interpret: bool = True) -> jax.Array:
+    """Fused quantize+pack: f32 ``x`` with noise ``u`` -> uint32 words (W,).
+
+    Bit-exact with ``pack_codes(quantize_codes(x, ·), ·)`` for every size
+    (padding lanes are masked to 0, matching the pure path).
+    """
+    n = x.size
+    lane = lane_bits or bits
+    if lane > 32:
+        raise ValueError(f"lane width {lane} exceeds the 32-bit container")
+    cpw = 32 // lane
+    W = -(-n // cpw)
+    per_block = BLOCK_ROWS * LANES
+    W_pad = -(-W // per_block) * per_block
+    R = W_pad // LANES
+
+    def planar(a):
+        flat = jnp.pad(a.reshape(-1).astype(jnp.float32), (0, cpw * W - n))
+        planes = flat.reshape(cpw, W)
+        return jnp.pad(planes, ((0, 0), (0, W_pad - W))).reshape(cpw, R, LANES)
+
+    xf = planar(x) / clip
+    uf = planar(u)
+
+    gain = float(2 ** (bits - 1))
+    g = int(2 ** (bits - 1))
+    words = pl.pallas_call(
+        functools.partial(_quantize_pack_kernel, gain=gain, g=g, lane=lane,
+                          cpw=cpw, n=n, W=W, stochastic=stochastic),
+        grid=(R // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((cpw, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((cpw, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, LANES), jnp.uint32),
+        interpret=interpret,
+    )(xf, uf)
+    return words.reshape(-1)[:W]
+
+
+def _unpack_dequantize_kernel(words_ref, out_ref, *, lane: int, cpw: int,
+                              bias: int, inv_gain: float):
+    words = words_ref[...]                                  # (BR, LANES) u32
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane).reshape(cpw, 1, 1)
+    mask = jnp.uint32(2 ** lane - 1)
+    lanes = (words[None] >> shifts) & mask                  # (cpw, BR, LANES)
+    out_ref[...] = (lanes.astype(jnp.int32) - bias).astype(jnp.float32) * inv_gain
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "size", "clip",
+                                             "lane_bits", "sum_of",
+                                             "interpret"))
+def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,
+                      clip: float = 1.0, lane_bits: int = 0, sum_of: int = 1,
+                      interpret: bool = True) -> jax.Array:
+    """Fused unpack+dequantize: uint32 words -> flat f32 of length ``size``.
+
+    ``sum_of`` un-biases an aggregated buffer (psum of ``sum_of`` packed
+    shards adds one +G per summand per lane).
+    """
+    lane = lane_bits or bits
+    if lane > 32:
+        raise ValueError(f"lane width {lane} exceeds the 32-bit container")
+    cpw = 32 // lane
+    W = packed.size
+    per_block = BLOCK_ROWS * LANES
+    W_pad = -(-W // per_block) * per_block
+    R = W_pad // LANES
+    words = jnp.pad(packed.reshape(-1), (0, W_pad - W)).reshape(R, LANES)
+
+    g = int(2 ** (bits - 1))
+    inv_gain = clip / float(2 ** (bits - 1))
+    planes = pl.pallas_call(
+        functools.partial(_unpack_dequantize_kernel, lane=lane, cpw=cpw,
+                          bias=g * int(sum_of), inv_gain=inv_gain),
+        grid=(R // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((cpw, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cpw, R, LANES), jnp.float32),
+        interpret=interpret,
+    )(words)
+    return planes.reshape(cpw, W_pad)[:, :W].reshape(-1)[: int(size)]

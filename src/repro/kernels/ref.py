@@ -19,6 +19,24 @@ def dequantize_ref(codes: jnp.ndarray, bits: int, *, clip: float = 1.0) -> jnp.n
     return codes.astype(jnp.float32) / gain
 
 
+def quantize_pack_ref(x: jnp.ndarray, u: jnp.ndarray, bits: int, *,
+                      clip: float = 1.0, lane_bits: int = 0,
+                      stochastic: bool = True) -> jnp.ndarray:
+    """Oracle for the fused quantize+pack kernel: quantize then pack planar."""
+    from repro.core.quantization import pack_codes
+    codes = stochastic_quantize_ref(x, u, bits, clip=clip, stochastic=stochastic)
+    return pack_codes(codes, bits, lane_bits=lane_bits)
+
+
+def unpack_dequantize_ref(packed: jnp.ndarray, bits: int, size: int, *,
+                          clip: float = 1.0, lane_bits: int = 0,
+                          sum_of: int = 1) -> jnp.ndarray:
+    """Oracle for the fused unpack+dequantize kernel (flat f32 of ``size``)."""
+    from repro.core.quantization import unpack_codes
+    codes = unpack_codes(packed, bits, size, lane_bits=lane_bits, sum_of=sum_of)
+    return dequantize_ref(codes, bits, clip=clip)
+
+
 def qmatmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray, sx: float, sw: float) -> jnp.ndarray:
     """int8 (M,K) @ int8 (K,N) -> f32, dequantized by the per-tensor scales."""
     acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),

@@ -41,6 +41,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.sharding import rules as rules_mod
 from repro.sharding.context import use_sharding_rules
+from repro.utils import compat
 from repro.utils import flops as flops_mod
 from repro.utils import hlo as hlo_mod
 from repro.utils import roofline as roofline_mod
@@ -54,11 +55,15 @@ def rng_struct():
 
 
 def lower_combo(arch: str, shape_name: str, multi_pod: bool, *,
-                collective: str = "paper", config: Optional[Config] = None,
+                collective: Optional[str] = None,
+                config: Optional[Config] = None,
                 mesh=None, suffix: str = ""):
-    """Lower+compile one combo; returns the result record (dict)."""
+    """Lower+compile one combo; returns the result record (dict).
+
+    ``collective=None`` resolves the config's ``quant.wire_format``."""
     shape = get_shape(shape_name)
     base = config if config is not None else get_config(arch)
+    collective = fl_mod.resolve_collective(base, collective)
     if not supports_shape(base, shape):
         return {"arch": arch, "shape": shape_name,
                 "mesh": "multi" if multi_pod else "single",
@@ -81,7 +86,7 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool, *,
     if cfg.train.decode_batch_2d and shape.kind == "decode":
         rule_overrides = {"batch": (("pod", "data", "model"),
                                     ("pod", "data"), ("data",))}
-    with jax.set_mesh(mesh), use_sharding_rules(mesh, rule_overrides):
+    with compat.set_mesh(mesh), use_sharding_rules(mesh, rule_overrides):
         if shape.kind == "train":
             step, kind = steps_mod.make_train_step(model, cfg, mesh,
                                                    collective=collective)
@@ -110,7 +115,7 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool, *,
     compile_s = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     coll = hlo_mod.collective_bytes(compiled.as_text())
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
@@ -212,7 +217,9 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
-    ap.add_argument("--collective", default="paper", choices=["paper", "int"])
+    ap.add_argument("--collective", default=None,
+                    choices=["paper", "int", "packed"],
+                    help="wire format (default: quant.wire_format from config)")
     ap.add_argument("--suffix", default="")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
     ap.add_argument("--skip-existing", action="store_true")

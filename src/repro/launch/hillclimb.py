@@ -30,10 +30,9 @@ from repro.launch.dryrun import OUT_DIR, lower_combo
 
 def _mesh(shape, axes):
     import math
+    from repro.utils import compat
     n = math.prod(shape)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[:n])
+    return compat.make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 EXPERIMENTS = {

@@ -5,19 +5,17 @@ touches jax device state — the dry-run must set XLA_FLAGS before first init.
 """
 from __future__ import annotations
 
-import jax
+from repro.utils import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi_pod adds the 2-pod axis (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_debug_mesh(devices: int = 8):
     """Small mesh for CPU tests: (devices//4, 4) over (data, model)."""
     assert devices % 4 == 0
-    return jax.make_mesh((devices // 4, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((devices // 4, 4), ("data", "model"))

@@ -35,6 +35,7 @@ def main():
     from repro.models import build_model
     from repro.sharding import rules as rules_mod
     from repro.sharding.context import use_sharding_rules
+    from repro.utils import compat
 
     cfg = apply_overrides(get_config(args.arch), tuple(args.overrides))
     model = build_model(cfg)
@@ -44,13 +45,12 @@ def main():
     elif n_dev >= 4:
         mesh = make_debug_mesh(n_dev - n_dev % 4)
     else:
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
     print(f"mesh {dict(mesh.shape)}; {cfg.model.name} "
           f"({cfg.model.param_count()/1e6:.1f}M params)")
 
     p_sh = rules_mod.param_shardings(model, cfg, mesh)
-    with jax.set_mesh(mesh), use_sharding_rules(mesh):
+    with compat.set_mesh(mesh), use_sharding_rules(mesh):
         params = jax.jit(model.init, out_shardings=p_sh)(jax.random.PRNGKey(0))
         prompts = jax.random.randint(jax.random.PRNGKey(1),
                                      (args.batch, args.prompt_len), 0,

@@ -34,9 +34,12 @@ def make_standard_train_step(model, config: Config) -> Callable:
     return step
 
 
-def make_train_step(model, config: Config, mesh, *, collective: str = "paper",
+def make_train_step(model, config: Config, mesh, *,
+                    collective: Optional[str] = None,
                     force_standard: bool = False) -> Tuple[Callable, str]:
-    """Returns (step_fn, kind) with kind in {"fl_round", "standard"}."""
+    """Returns (step_fn, kind) with kind in {"fl_round", "standard"}.
+
+    ``collective=None`` resolves ``config.quant.wire_format``."""
     if not force_standard:
         fl_round = fl_mod.make_fl_round(model, config, mesh, collective=collective)
         if fl_round is not None:

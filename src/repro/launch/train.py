@@ -18,7 +18,9 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (0 = real devices)")
-    ap.add_argument("--collective", default="paper", choices=["paper", "int"])
+    ap.add_argument("--collective", default=None,
+                    choices=["paper", "int", "packed"],
+                    help="wire format (default: quant.wire_format from config)")
     ap.add_argument("--steps", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
@@ -44,6 +46,7 @@ def main():
     from repro.models import build_model
     from repro.sharding import rules as rules_mod
     from repro.sharding.context import use_sharding_rules
+    from repro.utils import compat
 
     cfg = apply_overrides(get_config(args.arch), tuple(args.overrides))
     model = build_model(cfg)
@@ -55,19 +58,19 @@ def main():
     elif n_dev >= 4:
         mesh = make_debug_mesh(n_dev - n_dev % 4)
     else:
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)}  arch: {cfg.model.name} "
           f"({cfg.model.param_count()/1e6:.1f}M params)")
 
     steps = args.steps or cfg.train.steps
+    collective = fl_mod.resolve_collective(cfg, args.collective)
     step_fn, kind = steps_mod.make_train_step(model, cfg, mesh,
-                                              collective=args.collective)
-    print(f"step kind: {kind} (collective={args.collective}, "
+                                              collective=collective)
+    print(f"step kind: {kind} (collective={collective}, "
           f"quant bits={cfg.quant.bits}, q={cfg.channel.error_prob})")
 
     p_shardings = rules_mod.param_shardings(model, cfg, mesh)
-    with jax.set_mesh(mesh), use_sharding_rules(mesh):
+    with compat.set_mesh(mesh), use_sharding_rules(mesh):
         params = jax.jit(model.init, out_shardings=p_shardings)(
             jax.random.PRNGKey(cfg.fl.seed))
         start = 0

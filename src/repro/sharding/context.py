@@ -74,10 +74,8 @@ def current_rules() -> dict:
 def _manual_axes() -> frozenset:
     """Axes that are Manual in the current trace (inside shard_map bodies) —
     with_sharding_constraint may not mention them."""
-    try:
-        return frozenset(jax.sharding.get_abstract_mesh().manual_axes)
-    except Exception:
-        return frozenset()
+    from repro.utils import compat
+    return compat.manual_axes()
 
 
 def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:

@@ -1,0 +1,109 @@
+"""JAX version compatibility shims (pinned floor: jax 0.4.37).
+
+The repo targets the modern sharding API (``jax.sharding.AxisType``,
+``jax.set_mesh``, ``jax.shard_map(..., axis_names=...)``); the installed
+0.4.37 predates all three.  Every mesh/shard_map/cost-analysis touchpoint in
+src/, tests/ and benchmarks/ goes through this module so the same code runs
+on both API generations:
+
+  make_mesh(shape, axes)      -> jax.make_mesh, forwarding axis_types only
+                                 when the installed jax understands them
+  set_mesh(mesh)              -> ``jax.set_mesh`` context manager when
+                                 available, else the legacy ``with mesh:``
+                                 resource-env context
+  shard_map(f, mesh, ...)     -> new-style ``axis_names``/``check_vma``
+                                 translated to the 0.4.37 ``auto``/
+                                 ``check_rep`` parameters
+  cost_analysis(compiled)     -> one flat dict (0.4.37 returns a 1-element
+                                 list of dicts)
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Dict, Optional, Sequence, Set
+
+import jax
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_SET_MESH = hasattr(jax, "set_mesh")
+HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Optional[Sequence[Any]] = None, devices=None):
+    """``jax.make_mesh`` with ``axis_types`` forwarded only when supported.
+
+    On 0.4.37 every axis behaves as Auto (GSPMD) outside shard_map, which is
+    exactly what the modern call sites request, so dropping the argument is
+    semantics-preserving.
+    """
+    kwargs: Dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPE and axis_types is not None:
+        kwargs["axis_types"] = axis_types
+    elif HAS_AXIS_TYPE:
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def auto_axis_types(n: int):
+    """(AxisType.Auto,) * n on new jax, None on old (make_mesh ignores it)."""
+    if HAS_AXIS_TYPE:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    # legacy: Mesh is itself a context manager (resource env)
+    return mesh
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool = True,
+              axis_names: Optional[Set[str]] = None) -> Callable:
+    """New-style shard_map signature on either jax generation.
+
+    ``axis_names`` is the set of mesh axes that are Manual inside ``f``; the
+    remaining axes stay Auto (GSPMD).  0.4.37 spells that ``auto=<complement>``
+    and ``check_rep`` instead of ``check_vma``.
+    """
+    if HAS_NEW_SHARD_MAP:
+        kwargs: Dict[str, Any] = {"mesh": mesh, "in_specs": in_specs,
+                                  "out_specs": out_specs,
+                                  "check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+    # 0.4.37: partial-auto shard_map (auto=...) hard-crashes the XLA SPMD
+    # partitioner on non-trivial bodies (hlo_sharding_util manual-subgroup
+    # check), so every axis goes Manual.  Axes absent from in_specs simply
+    # replicate the body's compute — semantics are preserved, tensor
+    # parallelism inside the body degrades to replication on this jax floor.
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def manual_axes() -> frozenset:
+    """Mesh axes that are Manual in the current trace (inside shard_map)."""
+    try:  # modern: the abstract mesh records manual axes directly
+        return frozenset(jax.sharding.get_abstract_mesh().manual_axes)
+    except Exception:
+        pass
+    try:  # 0.4.37: every named axis in the axis env is a shard_map axis
+        from jax._src import core as _core
+        return frozenset(_core.get_axis_env().axis_sizes)
+    except Exception:
+        return frozenset()
+
+
+def cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` as one flat dict on every jax version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca

@@ -23,6 +23,7 @@ from typing import Dict
 
 from repro.config.base import Config
 from repro.configs.shapes import InputShape
+from repro.core.quantization import packed_lane_bits
 
 Q_CHUNK, KV_CHUNK = 512, 1024  # must match models/common.py
 
@@ -273,13 +274,18 @@ def analytic_costs(config: Config, shape: InputShape, mesh, *,
     if is_train:
         if step_kind.endswith("fl_round") and axes:
             wire_b = 4.0  # paper-faithful: the BS sums floats
-            if collective_mode == "int" and config.quant.bits:
+            if collective_mode in ("int", "packed") and config.quant.bits:
                 bits = config.quant.bits
                 shards = 1
                 for a in axes:
                     shards *= ms[a]
-                need = bits - 1 + math.ceil(math.log2(max(shards, 2))) + 1
-                wire_b = 1.0 if need <= 7 else (2.0 if need <= 15 else 4.0)
+                if collective_mode == "packed":
+                    # dense uint32 words; lane width matches the real wire
+                    lane = packed_lane_bits(bits, shards)
+                    wire_b = 4.0 if lane > 32 else 4.0 / (32 // lane)
+                else:
+                    need = bits - 1 + math.ceil(math.log2(max(shards, 2))) + 1
+                    wire_b = 1.0 if need <= 7 else (2.0 if need <= 15 else 4.0)
             delta_global = m.param_count() * wire_b
             coll["fl_allreduce"] = 2.0 * delta_global / (model_par * fsdp_par)
         else:

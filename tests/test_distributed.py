@@ -11,6 +11,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess multi-device lowering, minutes
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -34,8 +36,8 @@ def test_fl_round_equivalence_paper_vs_int_collective():
     from repro.core.fl import make_fl_round
     from repro.data.synthetic import token_batch
 
-    mesh = jax.make_mesh((2,4), ("data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((2,4), ("data","model"))
     cfg = reduced(get_config("olmo-1b"))
     cfg = dataclasses.replace(cfg, quant=dataclasses.replace(cfg.quant, bits=0),
                               channel=dataclasses.replace(cfg.channel, error_prob=0.0))
@@ -43,7 +45,7 @@ def test_fl_round_equivalence_paper_vs_int_collective():
     params = model.init(jax.random.PRNGKey(0))
     batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
     outs = {}
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for mode in ("paper", "int"):
             f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
             p2, m = f(params, batch, jax.random.PRNGKey(2))
@@ -68,15 +70,15 @@ def test_fl_round_quantized_step_close_to_unquantized():
     from repro.core.fl import make_fl_round
     from repro.data.synthetic import token_batch
 
-    mesh = jax.make_mesh((2,4), ("data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((2,4), ("data","model"))
     base = reduced(get_config("qwen2.5-14b"))
     base = dataclasses.replace(base, channel=dataclasses.replace(base.channel, error_prob=0.0))
     model = build_model(base)
     params = model.init(jax.random.PRNGKey(0))
     batch = token_batch(jax.random.PRNGKey(1), 12, 32, base.model.vocab_size)
     res = {}
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for bits in (0, 8):
             cfg = dataclasses.replace(base, quant=dataclasses.replace(base.quant, bits=bits))
             f = jax.jit(make_fl_round(model, cfg, mesh, collective="paper"))
@@ -101,14 +103,14 @@ def test_int_collective_emits_integer_allreduce():
     from repro.data.synthetic import token_batch
     from repro.utils.hlo import collective_bytes
 
-    mesh = jax.make_mesh((2,4), ("data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((2,4), ("data","model"))
     cfg = reduced(get_config("olmo-1b"))
     model = build_model(cfg)
     batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
     p_structs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         txts = {}
         for mode in ("paper", "int"):
             f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
@@ -121,6 +123,113 @@ def test_int_collective_emits_integer_allreduce():
     """)
 
 
+def test_packed_collective_strictly_fewer_bytes():
+    """The packed wire must beat the int-container wire (which beats f32),
+    and be numerically identical to it (same codes, exact lane sums)."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.hlo import collective_bytes
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((2,4), ("data","model"))
+    cfg = reduced(get_config("olmo-1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
+    outs, cb = {}, {}
+    with set_mesh(mesh):
+        for mode in ("paper", "int", "packed"):
+            f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
+            outs[mode], m = f(params, batch, jax.random.PRNGKey(2))
+            assert np.isfinite(float(m["loss"]))
+            txt = f.lower(params, batch, jax.random.PRNGKey(2)).compile().as_text()
+            cb[mode] = collective_bytes(txt)["total"]
+    assert cb["packed"] < cb["int"] < cb["paper"], cb
+    d = jax.tree_util.tree_map(
+        lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+        outs["int"], outs["packed"])
+    assert max(jax.tree_util.tree_leaves(d)) == 0.0, "packed must equal int exactly"
+    print("collective bytes paper=%d int=%d packed=%d" %
+          (cb["paper"], cb["int"], cb["packed"]))
+    """)
+
+
+def test_packed_matches_paper_bitforbit_when_quant_disabled():
+    """With quantization off every wire format degenerates to the f32 psum."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((2,4), ("data","model"))
+    cfg = reduced(get_config("olmo-1b"))
+    cfg = dataclasses.replace(cfg, quant=dataclasses.replace(cfg.quant, bits=0),
+                              channel=dataclasses.replace(cfg.channel, error_prob=0.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
+    outs = {}
+    with set_mesh(mesh):
+        for mode in ("paper", "packed"):
+            f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
+            outs[mode], _ = f(params, batch, jax.random.PRNGKey(2))
+    d = jax.tree_util.tree_map(
+        lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+        outs["paper"], outs["packed"])
+    assert max(jax.tree_util.tree_leaves(d)) == 0.0
+    print("OK")
+    """)
+
+
+def test_wire_format_knob_selects_collective():
+    """make_fl_round(collective=None) resolves QuantConfig.wire_format."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round, resolve_collective
+    from repro.data.synthetic import token_batch
+    from repro.utils.hlo import collective_bytes
+    from repro.utils.compat import make_mesh, set_mesh
+
+    base = reduced(get_config("olmo-1b"))
+    assert resolve_collective(base, None) == "paper"          # default f32
+    for wf, mode in (("f32", "paper"), ("int", "int"), ("packed", "packed")):
+        cfg = dataclasses.replace(base, quant=dataclasses.replace(base.quant,
+                                                                  wire_format=wf))
+        assert resolve_collective(cfg, None) == mode
+        assert resolve_collective(cfg, "int") == "int"        # explicit wins
+    try:
+        resolve_collective(dataclasses.replace(
+            base, quant=dataclasses.replace(base.quant, wire_format="bogus")), None)
+        raise SystemExit("expected ValueError")
+    except ValueError:
+        pass
+
+    mesh = make_mesh((2,4), ("data","model"))
+    cfg = dataclasses.replace(base, quant=dataclasses.replace(base.quant,
+                                                              wire_format="packed"))
+    model = build_model(cfg)
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
+    p = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    with set_mesh(mesh):
+        f_none = jax.jit(make_fl_round(model, cfg, mesh, collective=None))
+        f_expl = jax.jit(make_fl_round(model, cfg, mesh, collective="packed"))
+        cb_none = collective_bytes(f_none.lower(p, batch, rng).compile().as_text())
+        cb_expl = collective_bytes(f_expl.lower(p, batch, rng).compile().as_text())
+    assert cb_none["total"] == cb_expl["total"]
+    print("OK")
+    """)
+
+
 def test_error_aware_renormalization_distributed():
     """With q=0.5 some cohorts drop; error-aware aggregation must keep the
     update magnitude ~independent of the survivor count (eq. 6 vs eq. 5)."""
@@ -130,15 +239,15 @@ def test_error_aware_renormalization_distributed():
     from repro.models import build_model
     from repro.core.fl import make_fl_round
     from repro.data.synthetic import token_batch
-    mesh = jax.make_mesh((4,2), ("data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((4,2), ("data","model"))
     cfg = reduced(get_config("yi-9b"))
     cfg = dataclasses.replace(cfg, quant=dataclasses.replace(cfg.quant, bits=0),
                               channel=dataclasses.replace(cfg.channel, error_prob=0.5))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = token_batch(jax.random.PRNGKey(1), 16, 32, cfg.model.vocab_size)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         f = jax.jit(make_fl_round(model, cfg, mesh))
         for seed in range(8):
             p2, m = f(params, batch, jax.random.PRNGKey(seed))
@@ -162,8 +271,8 @@ def test_param_specs_divisibility_all_archs():
     from repro.configs import ASSIGNED_ARCHS, get_config
     from repro.models import build_model
     from repro.sharding.rules import param_specs
-    mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*3)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((2,2,2), ("pod","data","model"))
     # divisibility must hold for the REAL mesh sizes; emulate 16-way checks
     class FakeMesh:
         shape = {"pod": 2, "data": 16, "model": 16}
@@ -195,8 +304,8 @@ def test_long500k_sequence_parallel_decode():
     from repro.configs.shapes import get_shape
     from repro.launch.inputs import decode_specs
     from repro.models import build_model
-    mesh = jax.make_mesh((4,2), ("data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((4,2), ("data","model"))
     shape = get_shape("long_500k")
     cfg = for_shape(get_config("qwen2.5-14b"), shape)
     model = build_model(cfg)

@@ -8,8 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import quantization as Q
 from repro.kernels import ops, ref
 from repro.kernels.aggregate import masked_aggregate
+from repro.kernels.pack import quantize_pack, unpack_dequantize
 from repro.kernels.qmatmul import qmatmul
 from repro.kernels.quantize import dequantize_codes, stochastic_quantize_codes
 
@@ -74,6 +76,68 @@ def test_qmatmul_exact_integer_accumulation():
     wq = jnp.full((K, 8), 127, jnp.int8)
     got = qmatmul(xq, wq, jnp.float32(1.0), jnp.float32(1.0), interpret=True)
     assert float(got[0, 0]) == 127 * 127 * K
+
+
+# ---------------------------------------------------------------------------
+# fused quantize-and-pack / unpack-and-dequantize (the packed wire format)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(5,), (1000,), (421_642,), (7, 333),
+                                   (4, 128, 130)])
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+def test_quantize_pack_kernel_matches_ref(shape, bits):
+    """Word-level bit-exactness against quantize_ref -> pack_codes, for
+    aligned and unaligned sizes (padding lanes masked identically)."""
+    x = jax.random.uniform(jax.random.PRNGKey(20), shape, minval=-1.5,
+                           maxval=1.5)
+    u = jax.random.uniform(jax.random.PRNGKey(21), shape)
+    got = quantize_pack(x, u, bits, interpret=True)
+    want = ref.quantize_pack_ref(x, u, bits)
+    assert got.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits,lane_bits", [(8, 9), (4, 5), (2, 3), (8, 11)])
+def test_quantize_pack_kernel_guard_lanes(bits, lane_bits):
+    """Guard-lane widths (the aggregating psum layout) stay bit-exact."""
+    x = jax.random.normal(jax.random.PRNGKey(22), (10_000,)) * 0.7
+    u = jax.random.uniform(jax.random.PRNGKey(23), (10_000,))
+    got = quantize_pack(x, u, bits, lane_bits=lane_bits, interpret=True)
+    want = ref.quantize_pack_ref(x, u, bits, lane_bits=lane_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+@pytest.mark.parametrize("n", [17, 4096, 40_000])
+def test_unpack_dequantize_kernel_matches_ref(bits, n):
+    g = 2 ** (bits - 1)
+    codes = jax.random.randint(jax.random.PRNGKey(24), (n,), -g, g, jnp.int32)
+    packed = Q.pack_codes(codes, bits)
+    got = unpack_dequantize(packed, bits, n, interpret=True)
+    want = ref.unpack_dequantize_ref(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the fused pair round-trips the quantization grid exactly
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.dequantize_ref(codes, bits)))
+
+
+def test_pack_kernel_pair_summed_unbias():
+    """unpack(Σ_k pack(codes_k), sum_of=K) == dequantize(Σ_k codes_k) — the
+    per-bit-lane partial-sum property the packed collective relies on."""
+    bits, K, n = 8, 4, 5000
+    lane = Q.packed_lane_bits(bits, K)
+    g = 2 ** (bits - 1)
+    total_codes = np.zeros(n, np.int64)
+    total_words = None
+    for k in range(K):
+        codes = jax.random.randint(jax.random.PRNGKey(30 + k), (n,), -g, g,
+                                   jnp.int32)
+        total_codes += np.asarray(codes)
+        words = Q.pack_codes(codes, bits, lane_bits=lane)
+        total_words = words if total_words is None else total_words + words
+    got = unpack_dequantize(total_words, bits, n, lane_bits=lane, sum_of=K,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(got), total_codes / g, rtol=1e-6)
 
 
 @pytest.mark.parametrize("kd", [(10, 421_642), (3, 100), (16, 5000), (1, 2048)])

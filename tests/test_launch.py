@@ -8,6 +8,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess multi-device lowering, minutes
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -29,8 +33,8 @@ def test_lower_combo_small_mesh_reduced():
     from repro.configs import get_config, reduced
     from repro.launch.dryrun import lower_combo
     cfg = reduced(get_config("olmo-1b"))
-    mesh = jax.make_mesh((2,4), ("data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((2,4), ("data","model"))
     for shape in ("train_4k", "prefill_32k", "decode_32k"):
         # shrink the shape through the config path: reduced() caps seq/batch
         rec = lower_combo("olmo-1b", shape, False, config=cfg, mesh=mesh)
@@ -54,8 +58,8 @@ def test_decode_seq_over_model_fallback():
     from repro.launch.dryrun import lower_combo
     from repro.models import build_model
 
-    mesh = jax.make_mesh((2,4), ("data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((2,4), ("data","model"))
     shape = get_shape("decode_32k")
     # batch 128 % 8 == 0 -> full 2D possible on this mesh; force the seq
     # fallback with an odd batch via a custom shape
@@ -81,8 +85,8 @@ def test_zero_over_model_keeps_params_sharded():
     from repro.configs import get_config, reduced
     from repro.models import build_model
     from repro.sharding.rules import param_specs
-    mesh = jax.make_mesh((2,4), ("data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((2,4), ("data","model"))
     base = reduced(get_config("olmo-1b"))
     model = build_model(base)
 

@@ -115,3 +115,100 @@ def test_disabled_quantization_is_identity():
     x = jax.random.normal(jax.random.PRNGKey(12), (100,))
     q = Q.quantize(x, jax.random.PRNGKey(13), QuantConfig(bits=0))
     np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# paper-invariant property sweeps (§II-A/B, eq. 16)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+def test_stochastic_rounding_unbiased_all_bits(bits):
+    """mean over many keys of quantize(x) ≈ clip(x) for every bit width,
+    including values outside the clip range (which quantize to the clip)."""
+    g = 2.0 ** (bits - 1)
+    x = jax.random.uniform(jax.random.PRNGKey(40), (1500,),
+                           minval=-2.0, maxval=2.0)
+    target = jnp.clip(x, -1.0, (g - 1) / g)  # representable range
+    cfg = QuantConfig(bits=bits)
+    n_draws = 384
+    keys = jax.random.split(jax.random.PRNGKey(41), n_draws)
+    qmean = jnp.stack([Q.quantize(x, k, cfg) for k in keys]).mean(0)
+    step = 1.0 / g
+    tol = step / (2 * np.sqrt(n_draws)) * 6  # 6-sigma of the mean estimator
+    assert float(jnp.abs(qmean - target).max()) <= tol
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+def test_variance_respects_bound_all_bits(bits):
+    """Empirical Var[Q(x)] <= step²/4 = quantization_variance_bound(bits)."""
+    x = jax.random.uniform(jax.random.PRNGKey(42), (400,),
+                           minval=-0.9, maxval=0.9)
+    cfg = QuantConfig(bits=bits)
+    keys = jax.random.split(jax.random.PRNGKey(43), 512)
+    qs = jnp.stack([Q.quantize(x, k, cfg) for k in keys])
+    var = float(jnp.var(qs, axis=0).max())
+    assert var <= Q.quantization_variance_bound(bits) * 1.15
+
+
+# ---------------------------------------------------------------------------
+# the packed wire format
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+@pytest.mark.parametrize("n", [1, 31, 128, 4097])
+def test_pack_unpack_roundtrip_exact(bits, n):
+    g = 2 ** (bits - 1)
+    codes = jax.random.randint(jax.random.PRNGKey(50 + bits), (n,), -g, g,
+                               jnp.int32)
+    packed = Q.pack_codes(codes, bits)
+    assert packed.dtype == jnp.uint32
+    assert packed.size == Q.packed_words(n, bits)
+    out = Q.unpack_codes(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+@pytest.mark.parametrize("bits,num_shards", [(2, 2), (4, 8), (8, 2), (8, 5),
+                                             (16, 2)])
+def test_packed_lane_sum_recovers_code_sum(bits, num_shards):
+    """Σ_k pack(codes_k) with guard lanes unpacks to Σ_k codes_k exactly —
+    no cross-lane carries (the packed psum collective's invariant)."""
+    lane = Q.packed_lane_bits(bits, num_shards)
+    g = 2 ** (bits - 1)
+    n = 777
+    total_words = None
+    total_codes = np.zeros(n, np.int64)
+    for s in range(num_shards):
+        codes = jax.random.randint(jax.random.PRNGKey(60 + s), (n,), -g, g,
+                                   jnp.int32)
+        total_codes += np.asarray(codes)
+        w = Q.pack_codes(codes, bits, lane_bits=lane)
+        total_words = w if total_words is None else total_words + w
+    out = Q.unpack_codes(total_words, bits, n, lane_bits=lane,
+                         sum_of=num_shards)
+    np.testing.assert_array_equal(np.asarray(out), total_codes)
+
+
+def test_packed_payload_bits_vs_ideal():
+    """Wire bits approach the paper's d·n payload: exact at lane==bits with
+    cpw | d, and always < the int-container wire (the "int" collective)."""
+    d = 1_000_000
+    assert Q.packed_payload_bits(d, 8) == Q.payload_bits(d, 8)  # 4 | d
+    assert Q.packed_payload_bits(d, 2) == Q.payload_bits(d, 2)
+    # guard lanes cost ceil(log2 K) extra bits per code
+    assert Q.packed_payload_bits(d, 8, num_shards=2) == 32 * -(-d // 3)
+    # always beats one int16 container per param at 8 bits
+    assert Q.packed_payload_bits(d, 8, num_shards=2) < 16 * d
+
+
+def test_pack_tree_codes_structure():
+    tree = {"a": jnp.ones((10, 3)) * 0.3, "b": [jnp.zeros((7,))]}
+    cfg = QuantConfig(bits=4)
+    codes = Q.quantize_tree_codes(tree, jax.random.PRNGKey(70), cfg)
+    packed = Q.pack_tree_codes(codes, cfg)
+    assert (jax.tree_util.tree_structure(packed)
+            == jax.tree_util.tree_structure(tree))
+    flat_codes = jax.tree_util.tree_leaves(codes)
+    for leaf, pleaf in zip(flat_codes, jax.tree_util.tree_leaves(packed)):
+        out = Q.unpack_codes(pleaf, cfg.bits, leaf.size)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(leaf.reshape(-1)))
