@@ -1,19 +1,35 @@
-"""Collective-payload comparison across all three wire formats:
+"""Collective-payload comparison across all four wire formats:
 
   paper  — f32 psum (faithful; n-bit payload simulated only)
   int    — integer codes in the smallest int container (int8/16/32)
   packed — codes bit-packed into dense uint32 words (wire ≈ payload_bits)
+  ring   — native-width ppermute ring, no guard bits (wire = d·n per hop)
 
-Each mode is lowered on an 8-device debug mesh and the post-SPMD HLO's
+Each mode is lowered on the selected mesh and the post-SPMD HLO's
 collective bytes are parsed; the per-mode bytes land in
-``BENCH_collective_modes.json`` next to this file so the wire-size
-trajectory is tracked across PRs.
+``BENCH_collective_modes.json`` next to this file (one entry per mesh,
+existing entries preserved) so the wire-size trajectory is tracked across
+PRs.  ``run.py --check`` recomputes the debug-mesh entry and fails on any
+byte regression.
+
+Meshes:
+  2x4   (default) — the 8-device debug mesh, data axis K=2
+  16x16           — the production dry-run, data axis K=16 (256 forced
+                    host devices; lowering only, minutes on CPU)
+
+CAVEAT: the HLO parser counts a scanned collective ONCE, not per loop trip
+(the same under-count utils/flops.py documents for flops) — so the ring's
+``collective_bytes`` is its per-hop cost.  ``wire_bits_per_param`` is the
+honest per-device total (hops x lane width): at K=16 the ring ships
+15x8=120 bits/param and the one-shot packed psum (16 bits/param) wins —
+the ring's regime is the small-K cohort axes of the hierarchical meshes.
 
 Runs in a subprocess so the forced device count never leaks into other
 benchmarks (the brief: only the dry-run sees >1 device globally).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -22,7 +38,8 @@ import textwrap
 
 from benchmarks.common import emit
 
-MODES = ("paper", "int", "packed")
+MODES = ("paper", "int", "packed", "ring")
+MESHES = {"2x4": (2, 4), "16x16": (16, 16)}
 OUT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "BENCH_collective_modes.json")
 
@@ -30,55 +47,128 @@ CODE = """
 import dataclasses, json, time, jax, jax.numpy as jnp
 from repro.configs import get_config, reduced
 from repro.models import build_model
+from repro.core import aggregation as agg
 from repro.core.fl import make_fl_round
 from repro.data.synthetic import token_batch
 from repro.utils.compat import make_mesh, set_mesh
 from repro.utils.hlo import collective_bytes
 
-mesh = make_mesh((2,4), ("data","model"))
+mesh_shape = MESH_SHAPE
+mesh = make_mesh(mesh_shape, ("data","model"))
 cfg = reduced(get_config("olmo-1b"))
 model = build_model(cfg)
-batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
+bs = 6 * mesh_shape[0]  # 2 samples per local iter per cohort (12 on 2x4)
+batch = token_batch(jax.random.PRNGKey(1), bs, 32, cfg.model.vocab_size)
 p = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
 out = {}
 with set_mesh(mesh):
-    for mode in ("paper", "int", "packed"):
+    for mode in ("paper", "int", "packed", "ring"):
         t0 = time.perf_counter()
         f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
         txt = f.lower(p, batch, rng).compile().as_text()
         cb = collective_bytes(txt)
         out[mode] = {"collective_bytes": cb["total"],
+                     "wire_bits_per_param": agg.wire_bits_per_param(
+                         mode, cfg.quant, (mesh_shape[0],)),
                      "lower_compile_us": (time.perf_counter()-t0)*1e6}
 print("RESULT " + json.dumps(out))
 """
 
 
-def run() -> None:
+def _measure(mesh_key: str, timeout: int = 3000) -> dict:
+    shape = MESHES[mesh_key]
+    devices = shape[0] * shape[1]
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env.setdefault("PYTHONPATH", "src")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(CODE)],
-                       capture_output=True, text=True, env=env, timeout=600)
+    code = textwrap.dedent(CODE).replace("MESH_SHAPE", repr(shape))
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
     if r.returncode != 0:
-        emit("collective_modes", 0.0, f"FAIL:{r.stderr[-160:]}")
-        return
+        raise RuntimeError(f"collective_modes subprocess failed "
+                           f"({mesh_key}): {r.stderr[-400:]}")
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
-    res = json.loads(line[len("RESULT "):])
+    return json.loads(line[len("RESULT "):])
 
+
+def _load() -> dict:
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            return json.load(f)
+    return {}
+
+
+def _store(mesh_key: str, res: dict) -> None:
+    record = _load()
+    record["arch"] = "olmo-1b (reduced)"
+    entries = record.setdefault("entries", {})
+    # legacy flat schema (PR 1): migrate its debug entry
+    if "bytes_per_mode" in record:
+        entries.setdefault("2x4", {
+            "mesh": record.pop("mesh", [2, 4]),
+            "bytes_per_mode": record.pop("bytes_per_mode")})
+    entries[mesh_key] = {
+        "mesh": list(MESHES[mesh_key]),
+        "bytes_per_mode": {m: res[m]["collective_bytes"] for m in MODES},
+        "wire_bits_per_param": {m: round(res[m]["wire_bits_per_param"], 4)
+                                for m in MODES},
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def run(mesh_key: str = "2x4") -> None:
+    try:
+        res = _measure(mesh_key)
+    except Exception as e:  # noqa: BLE001 - benchmark must not crash the suite
+        emit("collective_modes", 0.0, f"FAIL:{str(e)[-160:]}")
+        return
     cb_paper = res["paper"]["collective_bytes"]
     for mode in MODES:
         cb = res[mode]["collective_bytes"]
         reduction = 1.0 - cb / cb_paper
-        emit(f"collective_{mode}_wire", res[mode]["lower_compile_us"],
-             f"collective_bytes={cb};reduction_vs_paper={reduction:.2%}")
+        emit(f"collective_{mode}_wire_{mesh_key}",
+             res[mode]["lower_compile_us"],
+             f"collective_bytes={cb};bits_per_param="
+             f"{res[mode]['wire_bits_per_param']:.2f};"
+             f"reduction_vs_paper={reduction:.2%}")
+    _store(mesh_key, res)
+    emit("collective_modes_json", 0.0,
+         f"wrote={os.path.basename(OUT_JSON)}:{mesh_key}")
 
-    record = {"arch": "olmo-1b (reduced)", "mesh": [2, 4],
-              "bytes_per_mode": {m: res[m]["collective_bytes"] for m in MODES}}
-    with open(OUT_JSON, "w") as f:
-        json.dump(record, f, indent=1)
-    emit("collective_modes_json", 0.0, f"wrote={os.path.basename(OUT_JSON)}")
+
+def check(mesh_key: str = "2x4") -> int:
+    """Regression gate: recompute ``bytes_per_mode`` and compare with the
+    committed JSON.  Returns the number of regressed modes (0 = pass)."""
+    committed = _load().get("entries", {}).get(mesh_key)
+    if committed is None:
+        print(f"collective_modes --check: no committed entry for {mesh_key}")
+        return 1
+    res = _measure(mesh_key)
+    failures = 0
+    for mode in MODES:
+        want = committed["bytes_per_mode"].get(mode)
+        got = res[mode]["collective_bytes"]
+        if want is None:
+            print(f"  {mode}: NEW (no committed bytes), got {got}")
+            continue
+        status = "ok" if got <= want else "REGRESSED"
+        failures += got > want
+        print(f"  {mode}: committed={want} recomputed={got} [{status}]")
+    return failures
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="2x4", choices=sorted(MESHES))
+    ap.add_argument("--check", action="store_true",
+                    help="compare recomputed bytes against the committed JSON")
+    args = ap.parse_args()
+    if args.check:
+        n = check(args.mesh)
+        if n:
+            raise SystemExit(f"{n} collective mode(s) regressed")
+    else:
+        run(args.mesh)

@@ -3,6 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2,fig4] [--fast]
+  PYTHONPATH=src python -m benchmarks.run --check   # wire-byte regression gate
 """
 from __future__ import annotations
 
@@ -33,7 +34,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset of " + ",".join(REGISTRY))
+    ap.add_argument("--check", action="store_true",
+                    help="recompute the collective wire bytes and fail if any "
+                         "mode regresses vs the committed "
+                         "BENCH_collective_modes.json")
     args = ap.parse_args()
+    if args.check:
+        from benchmarks import collective_modes
+        regressed = collective_modes.check()
+        if regressed:
+            raise SystemExit(
+                f"{regressed} collective mode(s) regressed vs "
+                f"BENCH_collective_modes.json")
+        print("# --check: collective wire bytes OK", file=sys.stderr)
+        return
     selected = [s for s in args.only.split(",") if s] or list(REGISTRY)
 
     print("name,us_per_call,derived")

@@ -18,7 +18,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--collective", default="int", choices=["paper", "int", "packed"])
+    ap.add_argument("--collective", default="int",
+                    choices=["paper", "int", "packed", "ring"])
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
     os.environ["XLA_FLAGS"] = (

@@ -187,6 +187,7 @@ class QuantConfig:
     #   "f32"    — paper-faithful float psum (n-bit payload simulated only)
     #   "int"    — integer codes in the smallest int container (int8/16/32)
     #   "packed" — codes bit-packed into dense uint32 words (wire ≈ payload_bits)
+    #   "ring"   — native n-bit ppermute ring, no guard bits (wire = d·n per hop)
     wire_format: str = "f32"
 
     @property

@@ -5,7 +5,7 @@ Pure forms (used by the MNIST simulator and tests):
   error_aware_aggregate — eq. 6: w + Σ α_k λ_k Δ_k / Σ α_k λ_k
 
 Collective forms (used inside the shard_map'd distributed FL round, one
-client cohort per ``data`` mesh shard).  Three wire formats, selected by
+client cohort per ``data`` mesh shard).  Four wire formats, selected by
 ``QuantConfig.wire_format`` / ``make_fl_round(collective=...)``:
 
   psum_aggregate ("paper" / "f32")
@@ -27,9 +27,29 @@ client cohort per ``data`` mesh shard).  Three wire formats, selected by
       vs 16 for "int" and 32 for "paper".  Numerically identical to "int"
       (same codes, same exact integer sum).
 
-All three renormalize by psum(α·λ) (eq. 6) and degrade gracefully: with
+  ring_psum_aggregate ("ring")
+      The guard bits go away: the whole code tree is concatenated, packed
+      at the NATIVE n-bit lane, and circulated around the cohort ring with
+      ``lax.ppermute`` — each hop unpacks the incoming buffer and
+      accumulates it into an int32 register tree, so the wire carries
+      exactly n bits/param per hop.  Multi-axis cohorts run nested rings,
+      re-packing the partial sums at n+⌈log2 m⌉ between levels.  Total
+      wire = Σ_l (K_l−1)·32/⌊32/(n+⌈log2 m_l⌉)⌋ bits/param — e.g. 8 at
+      n=8, K=2 (0.75x "packed") — best for the small cohort counts of the
+      hierarchical-FL meshes; the one-shot packed psum wins back for large
+      single-axis cohorts since the ring cost grows with K−1.  Numerically
+      identical to "int"/"packed" (same codes, same exact integer sum).
+
+All four renormalize by psum(α·λ) (eq. 6) and degrade gracefully: with
 quantization disabled (bits=0) or the uplink unquantized
-(quantize_uplink=False), "int" and "packed" fall back to the f32 psum.
+(quantize_uplink=False) every mode falls back to the f32 psum, and "packed"
+/ "ring" fall back to "int" when the lane would exceed the u32 container
+(huge bits x shards) — ``effective_wire_format`` reports the format that
+actually hits the wire so telemetry/energy charge the bytes really sent.
+When ``QuantConfig.use_pallas`` is set, the hot quantize→pack / unpack→
+dequantize / per-hop accumulate transforms run through the fused Pallas
+kernels in ``repro.kernels.pack`` (interpret mode on CPU), bit-exact with
+the pure-jnp path.
 """
 from __future__ import annotations
 
@@ -153,6 +173,11 @@ def packed_psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
     Dropped shards (λ=0) quantize a zero delta to the zero code
     deterministically (floor(0+u)=0 for u<1), so every shard contributes
     exactly one +G bias per lane — the unbias is a constant K·G.
+
+    With ``qcfg.use_pallas`` the quantize→bias→pack and unpack→unbias→
+    dequantize transforms run through the fused Pallas kernels
+    (``kernels.pack.quantize_pack`` / ``unpack_dequantize``), bit-exact
+    with the pure path (same key -> same rounding noise -> same words).
     """
     axes = tuple(axes)
     if not (qcfg.enabled and qcfg.quantize_uplink):
@@ -169,14 +194,179 @@ def packed_psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
     keys = jax.random.split(key, len(leaves))
     out = []
     for leaf, k in zip(leaves, keys):
-        codes = quant.quantize_codes(leaf.astype(jnp.float32) * (w * scale), k,
-                                     qcfg.bits, clip=qcfg.clip,
-                                     stochastic=qcfg.stochastic)
-        words = quant.pack_codes(codes, qcfg.bits, lane_bits=lane)
-        total = jax.lax.psum(words, axes)                  # u32 on the wire
-        code_sum = quant.unpack_codes(total, qcfg.bits, leaf.size,
-                                      lane_bits=lane, sum_of=num_shards)
-        deq = quant.dequantize_codes(code_sum.reshape(leaf.shape), qcfg.bits,
-                                     clip=qcfg.clip)
+        x = leaf.astype(jnp.float32) * (w * scale)
+        if qcfg.use_pallas:
+            from repro.kernels import ops as kops
+            words = kops.quantize_pack(x, k, qcfg.bits, clip=qcfg.clip,
+                                       lane_bits=lane,
+                                       stochastic=qcfg.stochastic)
+            total = jax.lax.psum(words, axes)              # u32 on the wire
+            deq = kops.unpack_dequantize(total, qcfg.bits, leaf.size,
+                                         clip=qcfg.clip, lane_bits=lane,
+                                         sum_of=num_shards).reshape(leaf.shape)
+        else:
+            codes = quant.quantize_codes(x, k, qcfg.bits, clip=qcfg.clip,
+                                         stochastic=qcfg.stochastic)
+            words = quant.pack_codes(codes, qcfg.bits, lane_bits=lane)
+            total = jax.lax.psum(words, axes)              # u32 on the wire
+            code_sum = quant.unpack_codes(total, qcfg.bits, leaf.size,
+                                          lane_bits=lane, sum_of=num_shards)
+            deq = quant.dequantize_codes(code_sum.reshape(leaf.shape),
+                                         qcfg.bits, clip=qcfg.clip)
         out.append(deq / (jnp.maximum(den, EPS) * scale))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def ring_psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
+                        qcfg: QuantConfig, key, axes: Sequence[str],
+                        axis_sizes: Sequence[int]) -> PyTree:
+    """Ring collective at NATIVE bit-width: raw codes circle the cohort.
+
+    Every shard quantizes its weighted delta to the exact same codes as the
+    "int"/"packed" modes (same PRNG stream), concatenates all leaves into
+    one flat vector and packs it at the native ``bits`` lane — no guard
+    bits.  ``lax.ppermute`` then shifts the packed buffer one position
+    around the ring per hop (a ``lax.scan`` over K−1 hops); each shard
+    unpacks whatever arrives and adds it into a flat int32 register tree
+    (``kernels.pack.repack`` when ``use_pallas`` — unpack + accumulate in
+    one VMEM pass).  After K−1 hops every shard holds Σ_k codes_k exactly,
+    so the result is bit-identical to "int"/"packed" while each hop ships
+    ~``bits`` bits/param instead of the guard-widened psum lanes.
+
+    Multi-axis cohorts (e.g. ("pod", "data")) run one ring per axis: after
+    finishing a level the register tree holds partial sums of m codes,
+    which the next level re-packs at lane ``bits + ceil(log2 m)`` (bias
+    m·G) and circulates the same way — still exact.
+    """
+    axes = tuple(axes)
+    axis_sizes = tuple(int(s) for s in axis_sizes)
+    num_shards = 1
+    for s in axis_sizes:
+        num_shards *= s
+    if not (qcfg.enabled and qcfg.quantize_uplink):
+        return psum_aggregate(delta, alpha, lam, qcfg, key, axes)
+    if quant.packed_lane_bits(qcfg.bits, num_shards) > 32:
+        # degenerate (huge bits x shards): the int32 register tree itself
+        # could not hold the shard sum — same fallback rule as "packed"
+        return quantized_psum_aggregate(delta, alpha, lam, qcfg, key, axes,
+                                        num_shards)
+    bits = qcfg.bits
+    scale = float(num_shards)
+    w = (alpha * lam).astype(jnp.float32)
+    den = jax.lax.psum(w, axes)
+
+    leaves, treedef = jax.tree_util.tree_flatten(delta)
+    keys = jax.random.split(key, len(leaves))
+    n = sum(leaf.size for leaf in leaves)
+
+    if qcfg.use_pallas:
+        from repro.kernels import ops as kops
+        xcat = jnp.concatenate([
+            (leaf.astype(jnp.float32) * (w * scale)).reshape(-1)
+            for leaf in leaves])
+        ucat = jnp.concatenate([
+            jax.random.uniform(k, leaf.shape, dtype=jnp.float32).reshape(-1)
+            for leaf, k in zip(leaves, keys)])
+        buf = kops.quantize_pack(xcat, None, bits, clip=qcfg.clip,
+                                 lane_bits=bits, stochastic=qcfg.stochastic,
+                                 u=ucat)
+        # own codes = exact unpack of the freshly packed buffer
+        acc = kops.repack(buf, jnp.zeros((n,), jnp.int32), bits, n,
+                          lane_bits=bits, sum_of=1)
+    else:
+        acc = jnp.concatenate([
+            quant.quantize_codes(leaf.astype(jnp.float32) * (w * scale), k,
+                                 bits, clip=qcfg.clip,
+                                 stochastic=qcfg.stochastic).reshape(-1)
+            for leaf, k in zip(leaves, keys)])
+        buf = quant.pack_codes(acc, bits, lane_bits=bits)
+
+    m = 1  # codes per register so far (partial-sum multiplicity)
+    for axis, K in zip(axes, axis_sizes):
+        if K <= 1:
+            continue
+        lane = quant.packed_lane_bits(bits, m)
+        if m > 1:  # level transition: re-pack partial sums at the sum width
+            buf = quant.pack_codes(acc, bits, lane_bits=lane, sum_of=m)
+        perm = [(j, (j + 1) % K) for j in range(K)]
+
+        def hop(carry, _, *, axis=axis, lane=lane, m=m):
+            b, a = carry
+            b = jax.lax.ppermute(b, axis, perm)
+            if qcfg.use_pallas:
+                from repro.kernels import ops as kops
+                a = kops.repack(b, a, bits, n, lane_bits=lane, sum_of=m)
+            else:
+                a = a + quant.unpack_codes(b, bits, n, lane_bits=lane,
+                                           sum_of=m)
+            return (b, a), None
+
+        (buf, acc), _ = jax.lax.scan(hop, (buf, acc), None, length=K - 1)
+        m *= K
+
+    out, offset = [], 0
+    for leaf in leaves:
+        code_sum = acc[offset: offset + leaf.size].reshape(leaf.shape)
+        offset += leaf.size
+        deq = quant.dequantize_codes(code_sum, bits, clip=qcfg.clip)
+        out.append(deq / (jnp.maximum(den, EPS) * scale))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting: what actually hits the wire per mode (incl. fallbacks)
+# ---------------------------------------------------------------------------
+
+def effective_wire_format(collective: str, qcfg: QuantConfig,
+                          num_shards: int) -> str:
+    """The format that actually crosses the wire after degenerate fallbacks.
+
+    "int"/"packed"/"ring" degrade to "paper" (f32 psum) when the uplink is
+    not quantized, and "packed"/"ring" degrade to "int" when the psum lane
+    / register tree would overflow its 32-bit container.  Telemetry and
+    energy accounting must charge THIS format's bytes, not the requested
+    one (otherwise the lane>32 fallback silently under-reports the wire).
+    """
+    if collective not in ("paper", "int", "packed", "ring"):
+        raise ValueError(f"unknown collective {collective!r}")
+    if collective == "paper":
+        return "paper"
+    if not (qcfg.enabled and qcfg.quantize_uplink):
+        return "paper"
+    if (collective in ("packed", "ring")
+            and quant.packed_lane_bits(qcfg.bits, num_shards) > 32):
+        return "int"
+    return collective
+
+
+def wire_bits_per_param(collective: str, qcfg: QuantConfig,
+                        axis_sizes: Sequence[int]) -> float:
+    """Per-device wire bits per parameter actually sent by the collective
+    (after fallbacks), summed over every hop for the ring.
+
+    "paper" charges the f32 psum payload (32); "int" the integer container;
+    "packed" the guard-lane u32 words; "ring" (K_l−1) hops per level at the
+    level's lane width.  The psum modes ship each param once per device
+    (the all-reduce doubling is a topology cost, charged in utils/flops).
+    """
+    axis_sizes = tuple(int(s) for s in axis_sizes)
+    num_shards = 1
+    for s in axis_sizes:
+        num_shards *= s
+    eff = effective_wire_format(collective, qcfg, num_shards)
+    if eff == "paper":
+        return 32.0
+    if eff == "int":
+        container = _int_container(qcfg.bits, num_shards)
+        return {jnp.int8: 8.0, jnp.int16: 16.0, jnp.int32: 32.0}[container]
+    if eff == "packed":
+        lane = quant.packed_lane_bits(qcfg.bits, num_shards)
+        return 32.0 / (32 // lane)
+    total, m = 0.0, 1
+    for k in axis_sizes:
+        if k <= 1:
+            continue
+        lane = quant.packed_lane_bits(qcfg.bits, m)
+        total += (k - 1) * 32.0 / (32 // lane)
+        m *= k
+    return total

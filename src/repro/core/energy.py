@@ -25,17 +25,28 @@ def local_training_energy_j(cfg: EnergyConfig, num_params: int, bits: int,
 
 def uplink_energy_j(ch_cfg: ChannelConfig, num_params: int, bits: int,
                     rate_bps_hz: jnp.ndarray,
-                    tx_power_w: jnp.ndarray | None = None) -> jnp.ndarray:
-    """eq. 9 — transmission energy at the achieved FBL rate."""
+                    tx_power_w: jnp.ndarray | None = None,
+                    wire_bits_per_param: float | None = None) -> jnp.ndarray:
+    """eq. 9 — transmission energy at the achieved FBL rate.
+
+    ``wire_bits_per_param`` overrides the paper's ideal d·n payload with
+    the bits a realised collective actually ships (possibly fractional —
+    e.g. 10.67 for packed guard lanes, or the int-container width after a
+    lane>32 fallback; see ``aggregation.wire_bits_per_param`` and the
+    ``wire_bits_per_param`` entry of the distributed round telemetry).
+    """
     p = ch_cfg.tx_power_w if tx_power_w is None else tx_power_w
-    payload = jnp.asarray(num_params, jnp.float32) * jnp.maximum(bits, 1)
+    wire = bits if wire_bits_per_param is None else wire_bits_per_param
+    payload = jnp.asarray(num_params, jnp.float32) * jnp.maximum(wire, 1)
     tau = ch.transmission_time_s(payload, ch_cfg.bandwidth_hz, rate_bps_hz)
     return tau * p
 
 
 def uplink_time_s(ch_cfg: ChannelConfig, num_params: int, bits: int,
-                  rate_bps_hz: jnp.ndarray) -> jnp.ndarray:
-    payload = jnp.asarray(num_params, jnp.float32) * jnp.maximum(bits, 1)
+                  rate_bps_hz: jnp.ndarray,
+                  wire_bits_per_param: float | None = None) -> jnp.ndarray:
+    wire = bits if wire_bits_per_param is None else wire_bits_per_param
+    payload = jnp.asarray(num_params, jnp.float32) * jnp.maximum(wire, 1)
     return ch.transmission_time_s(payload, ch_cfg.bandwidth_hz, rate_bps_hz)
 
 
@@ -56,10 +67,12 @@ def expected_total_energy_j(e_cfg: EnergyConfig, ch_cfg: ChannelConfig, *,
                             num_params: int, bits: int, local_iters: int,
                             rates_per_device: jnp.ndarray, num_devices: int,
                             devices_per_round: int, rounds: float,
-                            tx_power_w: jnp.ndarray | None = None) -> jnp.ndarray:
+                            tx_power_w: jnp.ndarray | None = None,
+                            wire_bits_per_param: float | None = None) -> jnp.ndarray:
     """eq. 14 — (K·T/N) Σ_k (e^l + e^u) with per-device achieved rates."""
     e_l = local_training_energy_j(e_cfg, num_params, bits, local_iters)
-    e_u = uplink_energy_j(ch_cfg, num_params, bits, rates_per_device, tx_power_w)
+    e_u = uplink_energy_j(ch_cfg, num_params, bits, rates_per_device, tx_power_w,
+                          wire_bits_per_param=wire_bits_per_param)
     per_device = e_l + e_u  # e_l broadcast over devices
     k_over_n = devices_per_round / num_devices
     return k_over_n * rounds * jnp.sum(per_device)
@@ -68,8 +81,10 @@ def expected_total_energy_j(e_cfg: EnergyConfig, ch_cfg: ChannelConfig, *,
 def round_time_s(e_cfg: EnergyConfig, ch_cfg: ChannelConfig, *, num_params: int,
                  bits: int, local_iters: int, macs_per_iter: float,
                  rates_per_device: jnp.ndarray, num_devices: int,
-                 devices_per_round: int) -> jnp.ndarray:
+                 devices_per_round: int,
+                 wire_bits_per_param: float | None = None) -> jnp.ndarray:
     """τ_pr = (K/N) Σ_k (τ_k^u + τ_k^comp) (paper §III)."""
-    tau_u = uplink_time_s(ch_cfg, num_params, bits, rates_per_device)
+    tau_u = uplink_time_s(ch_cfg, num_params, bits, rates_per_device,
+                          wire_bits_per_param=wire_bits_per_param)
     tau_c = compute_time_s(e_cfg, macs_per_iter, local_iters)
     return devices_per_round / num_devices * jnp.sum(tau_u + tau_c)

@@ -31,9 +31,20 @@ Two runtimes share the same math:
                    collective bytes track the paper's payload-bits
                    accounting (the energy model's d·n) instead of
                    overshooting it 2-4x.
+    "ring"         guard bits gone: the code tree circulates the cohort
+                   ring (``lax.ppermute``) packed at the NATIVE n-bit
+                   lane; each hop accumulates into an int32 register
+                   tree, so the wire is the paper's d·n floor per hop —
+                   e.g. 8 bits/param at n=8, K=2 (0.75x "packed").
 
-  See ``aggregation.py`` for the three collective implementations and
-  ``quantization.pack_codes`` / ``kernels/pack.py`` for the wire format.
+  Every quantized mode produces the bit-identical aggregated model (same
+  codes, same exact integer sum).  The round metrics carry
+  ``wire_bits_per_param`` — the bits that actually hit the wire after
+  degenerate fallbacks (see ``aggregation.effective_wire_format``) — so
+  energy accounting charges what was really sent.
+
+  See ``aggregation.py`` for the four collective implementations and
+  ``quantization.pack_codes`` / ``kernels/pack.py`` for the wire formats.
 """
 from __future__ import annotations
 
@@ -270,7 +281,8 @@ def fl_data_axes(mesh, config: Optional[Config] = None) -> Tuple[str, ...]:
     return tuple(a for a in wanted if a in mesh.shape)
 
 
-_WIRE_TO_COLLECTIVE = {"f32": "paper", "int": "int", "packed": "packed"}
+_WIRE_TO_COLLECTIVE = {"f32": "paper", "int": "int", "packed": "packed",
+                       "ring": "ring"}
 
 
 def resolve_collective(config: Config, collective: Optional[str]) -> str:
@@ -281,7 +293,7 @@ def resolve_collective(config: Config, collective: Optional[str]) -> str:
             raise ValueError(
                 f"unknown quant.wire_format {config.quant.wire_format!r}; "
                 f"expected one of {sorted(_WIRE_TO_COLLECTIVE)}")
-    if collective not in ("paper", "int", "packed"):
+    if collective not in ("paper", "int", "packed", "ring"):
         raise ValueError(f"unknown collective {collective!r}")
     return collective
 
@@ -292,11 +304,16 @@ def make_fl_round(model, config: Config, mesh, *,
 
     collective: "paper" (f32 wire, faithful) | "int" (integer-code wire)
     | "packed" (bit-packed uint32 wire, matching the paper's payload_bits
-    accounting) | None (the default — resolve ``config.quant.wire_format``).
+    accounting) | "ring" (native-width ppermute ring, no guard bits)
+    | None (the default — resolve ``config.quant.wire_format``).
 
     Returned fn: (params, batch, rng) -> (params, metrics).
     ``batch`` leaves are (global_batch, ...) sharded over the data axes;
-    each shard is one client cohort.
+    each shard is one client cohort.  ``metrics["wire_bits_per_param"]``
+    reports the bits each device actually puts on the wire per parameter
+    (after degenerate fallbacks — e.g. "packed" silently becomes "int"
+    when the guard lane exceeds 32 bits), the number energy accounting
+    must charge.
     """
     fl = config.fl
     qcfg = config.quant
@@ -306,7 +323,9 @@ def make_fl_round(model, config: Config, mesh, *,
         # no cohort axis on this mesh (e.g. FSDP arch on a single pod):
         # the FL round degenerates to standard training — caller falls back.
         return None
-    num_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    axis_sizes = tuple(int(mesh.shape[a]) for a in axes)
+    num_shards = int(np.prod(axis_sizes))
+    wire_bits = agg.wire_bits_per_param(collective, qcfg, axis_sizes)
     eta = fl.learning_rate
 
     def local_round(params, batch, rng):
@@ -344,6 +363,9 @@ def make_fl_round(model, config: Config, mesh, *,
         elif collective == "packed":
             agg_delta = agg.packed_psum_aggregate(delta, alpha, lam, qcfg,
                                                   k_q, axes, num_shards)
+        elif collective == "ring":
+            agg_delta = agg.ring_psum_aggregate(delta, alpha, lam, qcfg,
+                                                k_q, axes, axis_sizes)
         else:
             agg_delta = agg.psum_aggregate(delta, alpha, lam, qcfg, k_q, axes)
 
@@ -351,7 +373,8 @@ def make_fl_round(model, config: Config, mesh, *,
             lambda w, d: w + d.astype(w.dtype), params, agg_delta)
         mean_loss = jax.lax.pmean(losses.mean(), axes)
         survivors = jax.lax.psum(lam, axes)
-        return new_params, {"loss": mean_loss, "survivors": survivors}
+        return new_params, {"loss": mean_loss, "survivors": survivors,
+                            "wire_bits_per_param": jnp.float32(wire_bits)}
 
     batch_spec = jax.sharding.PartitionSpec(axes if len(axes) > 1 else axes[0])
     shmapped = compat.shard_map(
@@ -362,7 +385,8 @@ def make_fl_round(model, config: Config, mesh, *,
                   jax.sharding.PartitionSpec()),
         out_specs=(jax.sharding.PartitionSpec(),
                    {"loss": jax.sharding.PartitionSpec(),
-                    "survivors": jax.sharding.PartitionSpec()}),
+                    "survivors": jax.sharding.PartitionSpec(),
+                    "wire_bits_per_param": jax.sharding.PartitionSpec()}),
         check_vma=False, axis_names=set(axes))
     return shmapped
 

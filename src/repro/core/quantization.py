@@ -18,15 +18,16 @@ Beyond the paper's math, this module owns the *wire format*: ``pack_codes``
 / ``unpack_codes`` lay n-bit codes into dense uint32 words (32//n codes per
 word, planar bit-lanes) so the simulated collective payload matches the
 paper's §II-D2 ``payload_bits`` accounting instead of shipping one int16/32
-container per parameter.  See ``packed_payload_bits`` for the exact wire
-size and ``repro.kernels.pack`` for the fused Pallas quantize-and-pack /
-unpack-and-dequantize kernel pair.
+container per parameter.  See ``packed_payload_bits`` /
+``ring_payload_bits`` for the exact wire sizes of the one-shot guard-lane
+psum and the per-hop native-width ring, and ``repro.kernels.pack`` for the
+fused Pallas quantize-and-pack / unpack-and-dequantize / repack kernels.
 """
 from __future__ import annotations
 
 import functools
 import math
-from typing import Any, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -137,8 +138,13 @@ def packed_words(n: int, bits: int, *, lane_bits: int = 0) -> int:
     return -(-int(n) // codes_per_word(bits, lane_bits=lane_bits))
 
 
-def pack_codes(codes: jax.Array, bits: int, *, lane_bits: int = 0) -> jax.Array:
+def pack_codes(codes: jax.Array, bits: int, *, lane_bits: int = 0,
+               sum_of: int = 1) -> jax.Array:
     """Pack int32 codes in [-G, G-1] into a flat uint32 word vector.
+
+    ``sum_of`` packs PARTIAL SUMS of that many codes (values in
+    [-m·G, m·(G-1)], biased by m·G) — the ring collective's inter-level
+    repack; the lane must be at least ``packed_lane_bits(bits, sum_of)``.
 
     Padding lanes (beyond ``codes.size``) hold 0 — NOT the biased zero code —
     so unpack can distinguish them and packed buffers compare bit-exactly
@@ -146,7 +152,7 @@ def pack_codes(codes: jax.Array, bits: int, *, lane_bits: int = 0) -> jax.Array:
     """
     lane = lane_bits or bits
     cpw = codes_per_word(bits, lane_bits=lane)
-    g = int(2 ** (bits - 1))
+    g = int(2 ** (bits - 1)) * int(sum_of)
     n = codes.size
     W = packed_words(n, bits, lane_bits=lane)
     biased = (codes.reshape(-1).astype(jnp.int32) + g).astype(jnp.uint32)
@@ -191,6 +197,32 @@ def packed_payload_bits(num_params: int, bits: int, *,
     """
     lane = packed_lane_bits(bits, num_shards)
     return 32 * packed_words(num_params, bits, lane_bits=lane)
+
+
+def ring_payload_bits(num_params: int, bits: int,
+                      axis_sizes: Sequence[int]) -> int:
+    """Per-device wire bits of the ring collective, summed over every hop.
+
+    The ring circulates RAW codes packed at the native ``bits`` lane (no
+    guard bits): level ``l`` over a cohort axis of size K_l ships, on each
+    of its K_l - 1 hops, partial sums of ``m_l`` codes packed at lane
+    ``packed_lane_bits(bits, m_l)`` where m_l is the product of the
+    preceding axis sizes (m_0 = 1 -> native width).  Single-axis cohorts
+    therefore pay ~(K-1)/... hops of d·n bits each — 0.75x the guard-lane
+    psum at K=2, n=8 — but the cost grows linearly in K, so the one-shot
+    packed psum wins back for large single-axis cohorts (see
+    ``aggregation.wire_bits_per_param`` for the mode-selection math).
+    """
+    total = 0
+    m = 1
+    for k in axis_sizes:
+        k = int(k)
+        if k <= 1:
+            continue
+        lane = packed_lane_bits(bits, m)
+        total += (k - 1) * 32 * packed_words(num_params, bits, lane_bits=lane)
+        m *= k
+    return total
 
 
 def quantization_variance_bound(bits: int, clip: float = 1.0) -> float:

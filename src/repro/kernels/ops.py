@@ -38,11 +38,25 @@ def dequantize_codes(codes: jax.Array, bits: int, *, clip: float = 1.0) -> jax.A
 
 def quantize_pack(x: jax.Array, key: jax.Array, bits: int, *,
                   clip: float = 1.0, lane_bits: int = 0,
-                  stochastic: bool = True) -> jax.Array:
-    """Fused quantize+pack through the kernel: x -> uint32 wire words."""
-    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+                  stochastic: bool = True, u: jax.Array | None = None) -> jax.Array:
+    """Fused quantize+pack through the kernel: x -> uint32 wire words.
+
+    ``u`` supplies the rounding noise directly (e.g. per-leaf streams
+    concatenated by the ring collective); otherwise it is drawn from ``key``
+    exactly as the pure path's ``_uniform_like``.
+    """
+    if u is None:
+        u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
     return _pack.quantize_pack(x, u, bits, clip=clip, lane_bits=lane_bits,
                                stochastic=stochastic, interpret=_INTERPRET)
+
+
+def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
+           lane_bits: int = 0, sum_of: int = 1) -> jax.Array:
+    """Fused ring-hop accumulate: unpack wire words, add into the int32
+    register tree (one VMEM pass)."""
+    return _pack.repack(packed, acc, bits, size, lane_bits=lane_bits,
+                        sum_of=sum_of, interpret=_INTERPRET)
 
 
 def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,

@@ -1,4 +1,5 @@
-"""Pallas TPU kernels: fused quantize-and-pack / unpack-and-dequantize.
+"""Pallas TPU kernels: fused quantize-and-pack / unpack-and-dequantize /
+mid-hop repack.
 
 The packed wire format (see ``repro.core.quantization.pack_codes``) lays
 biased n-bit codes planar into uint32 words: plane j of the flat code vector
@@ -8,6 +9,12 @@ whole hot transform in one VMEM pass:
   quantize_pack:     f32 x, u  ->  scale, stochastic-round, clip, bias,
                                    shift-OR into uint32 words
   unpack_dequantize: uint32    ->  per-lane extract, un-bias, scale to f32
+  repack:            uint32, i32 -> per-lane extract at the hop's sum width,
+                                   un-bias, add into the int32 register tree
+                                   (the ring collective's per-hop accumulate;
+                                   the forwarded buffer is the incoming words
+                                   unchanged, and level transitions re-pack
+                                   the register tree at the next sum width)
 
 Blocks are (cpw, BLOCK_ROWS, 128) for the planar operands against
 (BLOCK_ROWS, 128) word blocks — the planes of one word block ride in the
@@ -138,3 +145,63 @@ def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,
         interpret=interpret,
     )(words)
     return planes.reshape(cpw, W_pad)[:, :W].reshape(-1)[: int(size)]
+
+
+def _repack_kernel(words_ref, acc_ref, out_ref, *, lane: int, cpw: int,
+                   bias: int, n: int, W: int):
+    words = words_ref[...]                                  # (BR, LANES) u32
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane).reshape(cpw, 1, 1)
+    mask = jnp.uint32(2 ** lane - 1)
+    lanes = (words[None] >> shifts) & mask                  # (cpw, BR, LANES)
+    shape = lanes.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    plane = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    w = (pl.program_id(0) * shape[1] + row) * shape[2] + col
+    valid = (w < W) & (plane * W + w < n)
+    delta = jnp.where(valid, lanes.astype(jnp.int32) - bias, 0)
+    out_ref[...] = acc_ref[...] + delta
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "size", "lane_bits",
+                                             "sum_of", "interpret"))
+def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
+           lane_bits: int = 0, sum_of: int = 1,
+           interpret: bool = True) -> jax.Array:
+    """Fused mid-hop accumulate of the ring collective: unpack ``packed``
+    (partial sums of ``sum_of`` codes, biased by sum_of·G per lane at the
+    hop's ``lane_bits`` width) and add it into the flat int32 register tree
+    ``acc`` — one VMEM pass instead of unpack-materialize-add.
+
+    Bit-exact with ``acc + unpack_codes(packed, ·, sum_of=·)``.
+    """
+    lane = lane_bits or bits
+    if lane > 32:
+        raise ValueError(f"lane width {lane} exceeds the 32-bit container")
+    cpw = 32 // lane
+    n = int(size)
+    W = packed.size
+    per_block = BLOCK_ROWS * LANES
+    W_pad = -(-W // per_block) * per_block
+    R = W_pad // LANES
+    words = jnp.pad(packed.reshape(-1), (0, W_pad - W)).reshape(R, LANES)
+    # acc in the planar-of-wire geometry so word and register blocks align
+    acc_planes = jnp.pad(acc.reshape(-1).astype(jnp.int32),
+                         (0, cpw * W - n))
+    acc_planes = jnp.pad(acc_planes.reshape(cpw, W),
+                         ((0, 0), (0, W_pad - W))).reshape(cpw, R, LANES)
+
+    g = int(2 ** (bits - 1))
+    planes = pl.pallas_call(
+        functools.partial(_repack_kernel, lane=lane, cpw=cpw,
+                          bias=g * int(sum_of), n=n, W=W),
+        grid=(R // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((cpw, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((cpw, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cpw, R, LANES), jnp.int32),
+        interpret=interpret,
+    )(words, acc_planes)
+    return planes.reshape(cpw, W_pad)[:, :W].reshape(-1)[:n]

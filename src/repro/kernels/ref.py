@@ -37,6 +37,16 @@ def unpack_dequantize_ref(packed: jnp.ndarray, bits: int, size: int, *,
     return dequantize_ref(codes, bits, clip=clip)
 
 
+def repack_ref(packed: jnp.ndarray, acc: jnp.ndarray, bits: int, size: int, *,
+               lane_bits: int = 0, sum_of: int = 1) -> jnp.ndarray:
+    """Oracle for the fused mid-hop repack kernel: unpack the incoming ring
+    buffer (partial sums of ``sum_of`` codes at ``lane_bits``) and add it
+    into the flat int32 register tree ``acc``."""
+    from repro.core.quantization import unpack_codes
+    return acc.reshape(-1).astype(jnp.int32) + unpack_codes(
+        packed, bits, size, lane_bits=lane_bits, sum_of=sum_of)
+
+
 def qmatmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray, sx: float, sw: float) -> jnp.ndarray:
     """int8 (M,K) @ int8 (K,N) -> f32, dequantized by the per-tensor scales."""
     acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),

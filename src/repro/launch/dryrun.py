@@ -135,11 +135,27 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool, *,
         num_devices=n_dev,
         model_flops_global=roofline_mod.model_flops(cfg, shape))
 
+    wire = None
+    if step_kind.endswith("fl_round"):
+        from repro.core import aggregation as agg_mod
+        cohort_axes = fl_mod.fl_data_axes(mesh, cfg)
+        sizes = tuple(int(mesh.shape[a]) for a in cohort_axes)
+        shards = 1
+        for s in sizes:
+            shards *= s
+        wire = {  # the format/bits that actually hit the wire (post-fallback)
+            "requested": collective,
+            "effective": agg_mod.effective_wire_format(collective, cfg.quant,
+                                                       shards),
+            "bits_per_param": agg_mod.wire_bits_per_param(collective,
+                                                          cfg.quant, sizes),
+        }
+
     record = {
         "arch": arch, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",
         "mesh_shape": dict(mesh.shape), "status": "OK",
-        "step": step_kind, "collective_mode": collective,
+        "step": step_kind, "collective_mode": collective, "wire": wire,
         "compile_s": round(compile_s, 1),
         "memory": {
             "argument_bytes": mem.argument_size_in_bytes,
@@ -218,7 +234,7 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--collective", default=None,
-                    choices=["paper", "int", "packed"],
+                    choices=["paper", "int", "packed", "ring"],
                     help="wire format (default: quant.wire_format from config)")
     ap.add_argument("--suffix", default="")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))

@@ -19,7 +19,7 @@ def main():
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (0 = real devices)")
     ap.add_argument("--collective", default=None,
-                    choices=["paper", "int", "packed"],
+                    choices=["paper", "int", "packed", "ring"],
                     help="wire format (default: quant.wire_format from config)")
     ap.add_argument("--steps", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="")
@@ -96,6 +96,9 @@ def main():
                 extra = ""
                 if "survivors" in metrics:
                     extra = f" survivors={float(metrics['survivors']):.0f}"
+                if "wire_bits_per_param" in metrics:
+                    extra += (" wire_bits/param="
+                              f"{float(metrics['wire_bits_per_param']):.2f}")
                 print(f"step {step:5d} loss={loss:.4f} tok/s={tok_s:,.0f}{extra}")
             if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
                 save_checkpoint(args.checkpoint_dir, step + 1, params)

@@ -23,7 +23,7 @@ from typing import Dict
 
 from repro.config.base import Config
 from repro.configs.shapes import InputShape
-from repro.core.quantization import packed_lane_bits
+from repro.core import aggregation as agg_wire
 
 Q_CHUNK, KV_CHUNK = 512, 1024  # must match models/common.py
 
@@ -273,21 +273,24 @@ def analytic_costs(config: Config, shape: InputShape, mesh, *,
     axes = [a for a in config.fl.cohort_axes if a in ms] if is_train else []
     if is_train:
         if step_kind.endswith("fl_round") and axes:
-            wire_b = 4.0  # paper-faithful: the BS sums floats
-            if collective_mode in ("int", "packed") and config.quant.bits:
-                bits = config.quant.bits
-                shards = 1
-                for a in axes:
-                    shards *= ms[a]
-                if collective_mode == "packed":
-                    # dense uint32 words; lane width matches the real wire
-                    lane = packed_lane_bits(bits, shards)
-                    wire_b = 4.0 if lane > 32 else 4.0 / (32 // lane)
-                else:
-                    need = bits - 1 + math.ceil(math.log2(max(shards, 2))) + 1
-                    wire_b = 1.0 if need <= 7 else (2.0 if need <= 15 else 4.0)
+            # single source of truth for the per-mode wire width, including
+            # the degenerate fallbacks (unquantized uplink -> f32 psum,
+            # lane>32 -> int container) that the runtime collectives apply
+            axis_sizes = tuple(ms[a] for a in axes)
+            shards = 1
+            for s in axis_sizes:
+                shards *= s
+            eff = agg_wire.effective_wire_format(collective_mode,
+                                                 config.quant, shards)
+            wire_b = agg_wire.wire_bits_per_param(collective_mode,
+                                                  config.quant,
+                                                  axis_sizes) / 8.0
+            # psum modes: an all-reduce moves each param ~twice (reduce +
+            # broadcast); the ring already charges every hop explicitly.
+            allreduce_factor = 1.0 if eff == "ring" else 2.0
             delta_global = m.param_count() * wire_b
-            coll["fl_allreduce"] = 2.0 * delta_global / (model_par * fsdp_par)
+            coll["fl_allreduce"] = (allreduce_factor * delta_global
+                                    / (model_par * fsdp_par))
         else:
             # grads carry the param dtype (bf16) under GSPMD
             coll["grad_allreduce"] = 2.0 * params_global / (model_par * fsdp_par)

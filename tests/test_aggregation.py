@@ -69,6 +69,47 @@ def test_int_container_selection():
     assert agg._int_container(16, 4) == jnp.int32
 
 
+def test_effective_wire_format_fallbacks():
+    """Degenerate configs must surface the format actually sent: unquantized
+    uplinks are f32 psums; lane>32 packings are int psums."""
+    q8 = QuantConfig(bits=8)
+    for mode in ("paper", "int", "packed", "ring"):
+        assert agg.effective_wire_format(mode, q8, 8) == \
+            ("paper" if mode == "paper" else mode)
+    q_off = QuantConfig(bits=0)
+    q_nouplink = QuantConfig(bits=8, quantize_uplink=False)
+    for q in (q_off, q_nouplink):
+        for mode in ("int", "packed", "ring"):
+            assert agg.effective_wire_format(mode, q, 8) == "paper"
+    q30 = QuantConfig(bits=30)
+    assert agg.effective_wire_format("packed", q30, 8) == "int"  # lane 33
+    assert agg.effective_wire_format("ring", q30, 8) == "int"
+    assert agg.effective_wire_format("int", q30, 8) == "int"
+    assert agg.effective_wire_format("packed", q30, 2) == "packed"  # lane 31
+    with pytest.raises(ValueError):
+        agg.effective_wire_format("bogus", q8, 8)
+
+
+def test_wire_bits_per_param_matches_wire():
+    """The telemetry number equals the bits each device really ships."""
+    q8 = QuantConfig(bits=8)
+    assert agg.wire_bits_per_param("paper", q8, (2,)) == 32.0
+    assert agg.wire_bits_per_param("int", q8, (2,)) == 16.0    # int16 psum
+    assert agg.wire_bits_per_param("packed", q8, (2,)) == 32.0 / 3  # lane 9
+    assert agg.wire_bits_per_param("ring", q8, (2,)) == 8.0    # 1 native hop
+    # ring hops accumulate: K=16 -> 15 hops x 8 bits
+    assert agg.wire_bits_per_param("ring", q8, (16,)) == 15 * 8.0
+    # two-level cohort: native hop + sum-width hops (lane 9 -> 3 codes/word)
+    got = agg.wire_bits_per_param("ring", q8, (2, 4))
+    assert got == 1 * 8.0 + 3 * (32.0 / 3)
+    # lane>32 fallback charges the int container, not the requested format
+    q30 = QuantConfig(bits=30)
+    assert agg.wire_bits_per_param("packed", q30, (8,)) == 32.0
+    assert agg.wire_bits_per_param("ring", q30, (8,)) == 32.0
+    # unquantized uplink -> the f32 psum
+    assert agg.wire_bits_per_param("ring", QuantConfig(bits=0), (4,)) == 32.0
+
+
 def test_aggregate_kernel_matches_pure():
     """Pallas masked_aggregate == eq. 6 numerator/denominator."""
     K, D = 10, 4096

@@ -188,6 +188,234 @@ def test_packed_matches_paper_bitforbit_when_quant_disabled():
     """)
 
 
+def test_ring_collective_bit_identical_and_075x_bytes():
+    """The acceptance bar for the ring wire: on the 8-device debug mesh at
+    bits=8 the ring's HLO collective bytes are <= 0.75x the packed psum's,
+    the byte ordering is ring < packed < int < paper, and the aggregated
+    model is bit-identical to the "int" mode (same codes, exact sums)."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.hlo import collective_bytes
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((2,4), ("data","model"))
+    cfg = reduced(get_config("olmo-1b"))
+    assert cfg.quant.bits == 8
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
+    outs, cb, wire = {}, {}, {}
+    with set_mesh(mesh):
+        for mode in ("paper", "int", "packed", "ring"):
+            f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
+            outs[mode], m = f(params, batch, jax.random.PRNGKey(2))
+            assert np.isfinite(float(m["loss"]))
+            wire[mode] = float(m["wire_bits_per_param"])
+            txt = f.lower(params, batch, jax.random.PRNGKey(2)).compile().as_text()
+            cb[mode] = collective_bytes(txt)["total"]
+    assert cb["ring"] < cb["packed"] < cb["int"] < cb["paper"], cb
+    assert cb["ring"] <= 0.75 * cb["packed"], cb
+    assert "collective-permute" in jax.jit(
+        make_fl_round(model, cfg, mesh, collective="ring")
+    ).lower(params, batch, jax.random.PRNGKey(2)).compile().as_text()
+    want_wire = {"paper": 32.0, "int": 16.0, "packed": 32.0/3, "ring": 8.0}
+    assert all(abs(wire[m] - want_wire[m]) < 1e-4 for m in want_wire), wire
+    for other in ("int", "packed"):
+        d = jax.tree_util.tree_map(
+            lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+            outs[other], outs["ring"])
+        assert max(jax.tree_util.tree_leaves(d)) == 0.0, f"ring must equal {other}"
+    print("collective bytes paper=%d int=%d packed=%d ring=%d" %
+          (cb["paper"], cb["int"], cb["packed"], cb["ring"]))
+    """)
+
+
+def test_ring_bit_exact_across_bits_and_drops():
+    """Ring == packed bit-for-bit for bits in {1,2,4,8} with packet drops
+    (q=0.5, several rngs), and with quantization off it degenerates to the
+    f32 psum exactly."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((2,4), ("data","model"))
+    base = reduced(get_config("olmo-1b"))
+    base = dataclasses.replace(base, channel=dataclasses.replace(
+        base.channel, error_prob=0.5))
+    model = build_model(base)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, base.model.vocab_size)
+    with set_mesh(mesh):
+        for bits in (1, 2, 4, 8):
+            cfg = dataclasses.replace(base, quant=dataclasses.replace(
+                base.quant, bits=bits))
+            f_ring = jax.jit(make_fl_round(model, cfg, mesh, collective="ring"))
+            f_packed = jax.jit(make_fl_round(model, cfg, mesh, collective="packed"))
+            for seed in (2, 3, 4):
+                p_r, m_r = f_ring(params, batch, jax.random.PRNGKey(seed))
+                p_p, m_p = f_packed(params, batch, jax.random.PRNGKey(seed))
+                assert float(m_r["survivors"]) == float(m_p["survivors"])
+                d = jax.tree_util.tree_map(
+                    lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+                    p_r, p_p)
+                assert max(jax.tree_util.tree_leaves(d)) == 0.0, (bits, seed)
+        cfg0 = dataclasses.replace(base, quant=dataclasses.replace(
+            base.quant, bits=0))
+        f_ring = jax.jit(make_fl_round(model, cfg0, mesh, collective="ring"))
+        f_paper = jax.jit(make_fl_round(model, cfg0, mesh, collective="paper"))
+        p_r, _ = f_ring(params, batch, jax.random.PRNGKey(5))
+        p_f, _ = f_paper(params, batch, jax.random.PRNGKey(5))
+        d = jax.tree_util.tree_map(
+            lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+            p_r, p_f)
+        assert max(jax.tree_util.tree_leaves(d)) == 0.0
+    print("OK")
+    """)
+
+
+def test_ring_non_pow2_shards_and_all_dropped():
+    """A 3-shard cohort ring (non-power-of-two K) stays bit-identical to the
+    int psum, and an all-dropped round (q=1) is a no-op."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((3,2), ("data","model"))
+    base = reduced(get_config("olmo-1b"))
+    base = dataclasses.replace(base, channel=dataclasses.replace(
+        base.channel, error_prob=0.3))
+    model = build_model(base)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, base.model.vocab_size)
+    with set_mesh(mesh):
+        f_ring = jax.jit(make_fl_round(model, base, mesh, collective="ring"))
+        f_int = jax.jit(make_fl_round(model, base, mesh, collective="int"))
+        for seed in range(4):
+            p_r, m = f_ring(params, batch, jax.random.PRNGKey(seed))
+            p_i, _ = f_int(params, batch, jax.random.PRNGKey(seed))
+            d = jax.tree_util.tree_map(
+                lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+                p_r, p_i)
+            assert max(jax.tree_util.tree_leaves(d)) == 0.0, seed
+        cfg1 = dataclasses.replace(base, channel=dataclasses.replace(
+            base.channel, error_prob=1.0))
+        f1 = jax.jit(make_fl_round(model, cfg1, mesh, collective="ring"))
+        p1, m1 = f1(params, batch, jax.random.PRNGKey(7))
+        assert float(m1["survivors"]) == 0.0
+        d = jax.tree_util.tree_map(
+            lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+            params, p1)
+        assert max(jax.tree_util.tree_leaves(d)) == 0.0, "all-dropped must be a no-op"
+    print("OK")
+    """, devices=6)
+
+
+def test_lane_overflow_fallback_surfaces_effective_format():
+    """bits=30 on an 8-shard cohort makes the packed/ring lane 33 bits —
+    both modes must fall back to the int container AND report the int
+    container's wire bits in the round telemetry (the silent-fallback fix:
+    energy accounting charges the bytes actually sent)."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.core import aggregation as agg
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((8,1), ("data","model"))
+    cfg = reduced(get_config("olmo-1b"))
+    cfg = dataclasses.replace(cfg, quant=dataclasses.replace(cfg.quant, bits=30))
+    assert agg.effective_wire_format("packed", cfg.quant, 8) == "int"
+    assert agg.effective_wire_format("ring", cfg.quant, 8) == "int"
+    assert agg.wire_bits_per_param("ring", cfg.quant, (8,)) == 32.0
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 48, 32, cfg.model.vocab_size)
+    outs, txts, wire = {}, {}, {}
+    with set_mesh(mesh):
+        for mode in ("int", "packed", "ring"):
+            f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
+            outs[mode], m = f(params, batch, jax.random.PRNGKey(2))
+            wire[mode] = float(m["wire_bits_per_param"])
+            txts[mode] = f.lower(params, batch,
+                                 jax.random.PRNGKey(2)).compile().as_text()
+    # telemetry reports the int container (32b), not the requested format
+    assert wire == {"int": 32.0, "packed": 32.0, "ring": 32.0}, wire
+    assert "collective-permute" not in txts["ring"]  # no ring was built
+    for mode in ("packed", "ring"):
+        d = jax.tree_util.tree_map(
+            lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+            outs["int"], outs[mode])
+        assert max(jax.tree_util.tree_leaves(d)) == 0.0, mode
+    print("OK")
+    """)
+
+
+def test_pallas_kernels_routed_into_packed_and_ring():
+    """With use_pallas=True the packed/ring collectives must execute the
+    fused quantize_pack / unpack_dequantize / repack kernels (call-counted
+    at trace time) and match the pure-jnp paths bit-exactly (interpret
+    mode on CPU)."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+    import repro.kernels.ops as kops
+
+    calls = {}
+    for name in ("quantize_pack", "unpack_dequantize", "repack"):
+        def wrap(orig=getattr(kops, name), name=name):
+            def f(*a, **kw):
+                calls[name] = calls.get(name, 0) + 1
+                return orig(*a, **kw)
+            return f
+        setattr(kops, name, wrap())
+
+    mesh = make_mesh((2,4), ("data","model"))
+    base = reduced(get_config("olmo-1b"))
+    model = build_model(base)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, base.model.vocab_size)
+    with set_mesh(mesh):
+        for mode, expected in (("packed", ("quantize_pack", "unpack_dequantize")),
+                               ("ring", ("quantize_pack", "repack"))):
+            outs = {}
+            for pallas in (False, True):
+                calls.clear()
+                cfg = dataclasses.replace(base, quant=dataclasses.replace(
+                    base.quant, use_pallas=pallas))
+                f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
+                outs[pallas], _ = f(params, batch, jax.random.PRNGKey(2))
+                if pallas:
+                    for kernel in expected:
+                        assert calls.get(kernel, 0) > 0, (mode, kernel, calls)
+                else:
+                    assert not calls, (mode, calls)
+            d = jax.tree_util.tree_map(
+                lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+                outs[False], outs[True])
+            assert max(jax.tree_util.tree_leaves(d)) == 0.0, mode
+    print("OK")
+    """)
+
+
 def test_wire_format_knob_selects_collective():
     """make_fl_round(collective=None) resolves QuantConfig.wire_format."""
     run_py("""
@@ -201,7 +429,8 @@ def test_wire_format_knob_selects_collective():
 
     base = reduced(get_config("olmo-1b"))
     assert resolve_collective(base, None) == "paper"          # default f32
-    for wf, mode in (("f32", "paper"), ("int", "int"), ("packed", "packed")):
+    for wf, mode in (("f32", "paper"), ("int", "int"), ("packed", "packed"),
+                     ("ring", "ring")):
         cfg = dataclasses.replace(base, quant=dataclasses.replace(base.quant,
                                                                   wire_format=wf))
         assert resolve_collective(cfg, None) == mode

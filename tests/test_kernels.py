@@ -121,6 +121,53 @@ def test_unpack_dequantize_kernel_matches_ref(bits, n):
                                   np.asarray(ref.dequantize_ref(codes, bits)))
 
 
+@pytest.mark.parametrize("bits,sum_of", [(1, 1), (2, 3), (4, 2), (8, 1),
+                                         (8, 4), (16, 2)])
+@pytest.mark.parametrize("n", [17, 4096, 40_000])
+def test_repack_kernel_matches_ref(bits, sum_of, n):
+    """The ring's mid-hop accumulate (unpack-at-sum-width -> add, one VMEM
+    pass) is bit-exact against acc + unpack_codes for native and sum-width
+    lanes, aligned and unaligned sizes."""
+    lane = Q.packed_lane_bits(bits, sum_of)
+    g = 2 ** (bits - 1)
+    rng = np.random.default_rng(bits * 1000 + n + sum_of)
+    partial = jnp.asarray(rng.integers(-g * sum_of, g * sum_of - 1,
+                                       size=n).astype(np.int32))
+    acc = jnp.asarray(rng.integers(-50_000, 50_000, size=n).astype(np.int32))
+    words = Q.pack_codes(partial, bits, lane_bits=lane, sum_of=sum_of)
+    got = ops.repack(words, acc, bits, n, lane_bits=lane, sum_of=sum_of)
+    want = ref.repack_ref(words, acc, bits, n, lane_bits=lane, sum_of=sum_of)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(acc + partial))
+
+
+def test_repack_kernel_zero_acc_is_unpack():
+    """repack into a zero register tree == plain unpack (the ring's own-codes
+    initialisation when the packed buffer comes from the fused kernel)."""
+    bits, n = 8, 5000
+    g = 2 ** (bits - 1)
+    codes = jax.random.randint(jax.random.PRNGKey(31), (n,), -g, g, jnp.int32)
+    words = Q.pack_codes(codes, bits)
+    got = ops.repack(words, jnp.zeros((n,), jnp.int32), bits, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(codes))
+
+
+def test_repack_kernel_chained_hops_recover_ring_sum():
+    """K-1 chained repacks reproduce Σ_k codes_k exactly — the ring
+    collective's accumulation invariant at native lane width."""
+    bits, K, n = 4, 5, 10_001
+    g = 2 ** (bits - 1)
+    all_codes = [jax.random.randint(jax.random.PRNGKey(80 + k), (n,), -g, g,
+                                    jnp.int32) for k in range(K)]
+    acc = all_codes[0]
+    for k in range(1, K):
+        words = Q.pack_codes(all_codes[k], bits)  # native width, no guards
+        acc = ops.repack(words, acc, bits, n)
+    want = np.sum(np.stack([np.asarray(c) for c in all_codes], 0), axis=0)
+    np.testing.assert_array_equal(np.asarray(acc), want)
+
+
 def test_pack_kernel_pair_summed_unbias():
     """unpack(Σ_k pack(codes_k), sum_of=K) == dequantize(Σ_k codes_k) — the
     per-bit-lane partial-sum property the packed collective relies on."""

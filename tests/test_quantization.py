@@ -200,6 +200,41 @@ def test_packed_payload_bits_vs_ideal():
     assert Q.packed_payload_bits(d, 8, num_shards=2) < 16 * d
 
 
+@pytest.mark.parametrize("bits,sum_of", [(2, 3), (4, 2), (8, 4), (8, 7),
+                                         (16, 2)])
+def test_pack_codes_partial_sum_bias_roundtrip(bits, sum_of):
+    """pack_codes(sum_of=m) biases partial sums of m codes by m·G; the
+    matching unpack recovers them exactly — the ring's inter-level repack."""
+    lane = Q.packed_lane_bits(bits, sum_of)
+    g = 2 ** (bits - 1)
+    n = 1001
+    partial = jax.random.randint(jax.random.PRNGKey(90 + bits), (n,),
+                                 -g * sum_of, sum_of * (g - 1) + 1, jnp.int32)
+    words = Q.pack_codes(partial, bits, lane_bits=lane, sum_of=sum_of)
+    out = Q.unpack_codes(words, bits, n, lane_bits=lane, sum_of=sum_of)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(partial))
+
+
+def test_ring_payload_bits_accounting():
+    """Per-hop native-width accounting: K=2 at n=8 is exactly d·n (0.75x the
+    guard-lane psum words); multi-level rings add sum-width hops; size-1
+    axes are free."""
+    d = 1_200_000
+    # single hop at native width: the paper's d·n floor, 4 codes/word at n=8
+    assert Q.ring_payload_bits(d, 8, (2,)) == Q.payload_bits(d, 8)
+    assert (Q.ring_payload_bits(d, 8, (2,))
+            == 0.75 * Q.packed_payload_bits(d, 8, num_shards=2))
+    # K hops cost (K-1) x native words
+    assert Q.ring_payload_bits(d, 8, (5,)) == 4 * Q.ring_payload_bits(d, 8, (2,))
+    # two-level ring: level 0 native (K0-1 hops), level 1 at n+ceil(log2 K0)
+    two = Q.ring_payload_bits(d, 8, (2, 4))
+    lvl0 = 32 * Q.packed_words(d, 8, lane_bits=8)
+    lvl1 = 3 * 32 * Q.packed_words(d, 8, lane_bits=Q.packed_lane_bits(8, 2))
+    assert two == lvl0 + lvl1
+    assert Q.ring_payload_bits(d, 8, (1, 2)) == Q.ring_payload_bits(d, 8, (2,))
+    assert Q.ring_payload_bits(d, 8, ()) == 0
+
+
 def test_pack_tree_codes_structure():
     tree = {"a": jnp.ones((10, 3)) * 0.3, "b": [jnp.zeros((7,))]}
     cfg = QuantConfig(bits=4)
