@@ -1,16 +1,25 @@
-"""Collective-payload comparison across all four wire formats:
+"""Collective-payload comparison across all six wire formats:
 
   paper  — f32 psum (faithful; n-bit payload simulated only)
   int    — integer codes in the smallest int container (int8/16/32)
   packed — codes bit-packed into dense uint32 words (wire ≈ payload_bits)
   ring   — native-width ppermute ring, no guard bits (wire = d·n per hop)
+  rsag   — reduce-scatter + all-gather, growing lane widths
+           (wire ≈ 2·d·(n+⌈log2 K⌉) regardless of K)
+  auto   — resolved at trace time to the byte-minimal concrete mode
+           (ring on 2x4, packed on 16x16)
 
 Each mode is lowered on the selected mesh and the post-SPMD HLO's
 collective bytes are parsed; the per-mode bytes land in
 ``BENCH_collective_modes.json`` next to this file (one entry per mesh,
 existing entries preserved) so the wire-size trajectory is tracked across
-PRs.  ``run.py --check`` recomputes the debug-mesh entry and fails on any
-byte regression.
+PRs.  ``run.py --check`` recomputes the debug-mesh entry, fails on any
+byte regression, and — for EVERY committed entry — fails if "auto" is
+recorded as resolving to a mode that is not minimal by the entry's own
+``wire_bits_per_param`` (the honest metric; see the CAVEAT below for why
+raw HLO bytes cannot be compared across one-shot and scanned modes), or
+if rsag does not beat the ring's HLO bytes on a large-cohort (K >= 16)
+mesh.
 
 Meshes:
   2x4   (default) — the 8-device debug mesh, data axis K=2
@@ -19,10 +28,12 @@ Meshes:
 
 CAVEAT: the HLO parser counts a scanned collective ONCE, not per loop trip
 (the same under-count utils/flops.py documents for flops) — so the ring's
-``collective_bytes`` is its per-hop cost.  ``wire_bits_per_param`` is the
+``collective_bytes`` is its per-hop cost and rsag's is one hop per
+equal-lane scan group (O(log K) groups).  ``wire_bits_per_param`` is the
 honest per-device total (hops x lane width): at K=16 the ring ships
-15x8=120 bits/param and the one-shot packed psum (16 bits/param) wins —
-the ring's regime is the small-K cohort axes of the hierarchical meshes.
+15x8=120 bits/param, rsag 28.5, and the one-shot packed psum (16
+bits/param) wins — which is exactly what "auto" picks there; the ring's
+regime is the small-K cohort axes of the hierarchical meshes.
 
 Runs in a subprocess so the forced device count never leaks into other
 benchmarks (the brief: only the dry-run sees >1 device globally).
@@ -37,8 +48,11 @@ import sys
 import textwrap
 
 from benchmarks.common import emit
+from repro.config.base import COLLECTIVE_CHOICES  # jax-free source of truth
 
-MODES = ("paper", "int", "packed", "ring")
+MODES = COLLECTIVE_CHOICES
+CONCRETE = tuple(m for m in MODES if m != "auto")
+QUANTIZED = tuple(m for m in CONCRETE if m != "paper")
 MESHES = {"2x4": (2, 4), "16x16": (16, 16)}
 OUT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "BENCH_collective_modes.json")
@@ -48,7 +62,7 @@ import dataclasses, json, time, jax, jax.numpy as jnp
 from repro.configs import get_config, reduced
 from repro.models import build_model
 from repro.core import aggregation as agg
-from repro.core.fl import make_fl_round
+from repro.core.fl import fl_data_axes, make_fl_round
 from repro.data.synthetic import token_batch
 from repro.utils.compat import make_mesh, set_mesh
 from repro.utils.hlo import collective_bytes
@@ -61,16 +75,18 @@ bs = 6 * mesh_shape[0]  # 2 samples per local iter per cohort (12 on 2x4)
 batch = token_batch(jax.random.PRNGKey(1), bs, 32, cfg.model.vocab_size)
 p = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
-out = {}
+# the same cohort the lowered round plans over (not assumed single-axis)
+sizes = tuple(int(mesh.shape[a]) for a in fl_data_axes(mesh, cfg))
+out = {"auto_resolves_to": agg.resolve_auto(cfg.quant, sizes)}
 with set_mesh(mesh):
-    for mode in ("paper", "int", "packed", "ring"):
+    for mode in MODES_TUPLE:
         t0 = time.perf_counter()
         f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
         txt = f.lower(p, batch, rng).compile().as_text()
         cb = collective_bytes(txt)
         out[mode] = {"collective_bytes": cb["total"],
                      "wire_bits_per_param": agg.wire_bits_per_param(
-                         mode, cfg.quant, (mesh_shape[0],)),
+                         mode, cfg.quant, sizes),
                      "lower_compile_us": (time.perf_counter()-t0)*1e6}
 print("RESULT " + json.dumps(out))
 """
@@ -82,7 +98,8 @@ def _measure(mesh_key: str, timeout: int = 3000) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env.setdefault("PYTHONPATH", "src")
-    code = textwrap.dedent(CODE).replace("MESH_SHAPE", repr(shape))
+    code = (textwrap.dedent(CODE).replace("MESH_SHAPE", repr(shape))
+            .replace("MODES_TUPLE", repr(MODES)))
     r = subprocess.run([sys.executable, "-c", code],
                        capture_output=True, text=True, env=env,
                        timeout=timeout)
@@ -114,6 +131,7 @@ def _store(mesh_key: str, res: dict) -> None:
         "bytes_per_mode": {m: res[m]["collective_bytes"] for m in MODES},
         "wire_bits_per_param": {m: round(res[m]["wire_bits_per_param"], 4)
                                 for m in MODES},
+        "auto_resolves_to": res["auto_resolves_to"],
     }
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=1)
@@ -129,27 +147,62 @@ def run(mesh_key: str = "2x4") -> None:
     for mode in MODES:
         cb = res[mode]["collective_bytes"]
         reduction = 1.0 - cb / cb_paper
+        extra = (f";resolves_to={res['auto_resolves_to']}"
+                 if mode == "auto" else "")
         emit(f"collective_{mode}_wire_{mesh_key}",
              res[mode]["lower_compile_us"],
              f"collective_bytes={cb};bits_per_param="
              f"{res[mode]['wire_bits_per_param']:.2f};"
-             f"reduction_vs_paper={reduction:.2%}")
+             f"reduction_vs_paper={reduction:.2%}{extra}")
     _store(mesh_key, res)
     emit("collective_modes_json", 0.0,
          f"wrote={os.path.basename(OUT_JSON)}:{mesh_key}")
 
 
+def _check_auto_minimal(entries: dict) -> int:
+    """Gate: in EVERY committed entry "auto" must resolve to the mode with
+    the minimal ``wire_bits_per_param`` — the honest per-device total, NOT
+    the raw HLO bytes, which under-count scanned collectives (the ring's
+    120 bits/param shows as one hop of bytes; see the module caveat) — and
+    on large-cohort meshes (data axis >= 16) rsag's HLO bytes must beat
+    the per-hop ring's.  Pure-JSON checks — no recompute, so they cover
+    every mesh cheaply."""
+    failures = 0
+    for key, entry in entries.items():
+        wire = entry.get("wire_bits_per_param", {})
+        resolved = entry.get("auto_resolves_to")
+        if resolved is None or "auto" not in wire:
+            print(f"  {key}: no auto entry committed yet [REGRESSED]")
+            failures += 1
+            continue
+        best = min(wire[m] for m in QUANTIZED if m in wire)
+        ok = wire.get(resolved, float("inf")) <= best
+        status = "ok" if ok else "NOT WIRE-BIT-MINIMAL"
+        failures += not ok
+        print(f"  {key}: auto -> {resolved} "
+              f"({wire.get(resolved)} bits/param, min={best}) [{status}]")
+        bpm = entry.get("bytes_per_mode", {})
+        if entry.get("mesh", [0])[0] >= 16 and {"rsag", "ring"} <= set(bpm):
+            ok = bpm["rsag"] < bpm["ring"]
+            failures += not ok
+            print(f"  {key}: rsag bytes {bpm['rsag']} vs ring {bpm['ring']} "
+                  f"[{'ok' if ok else 'RSAG DOES NOT BEAT RING'}]")
+    return failures
+
+
 def check(mesh_key: str = "2x4") -> int:
-    """Regression gate: recompute ``bytes_per_mode`` and compare with the
-    committed JSON.  Returns the number of regressed modes (0 = pass)."""
-    committed = _load().get("entries", {}).get(mesh_key)
-    if committed is None:
+    """Regression gate: recompute ``bytes_per_mode`` for ``mesh_key`` and
+    compare with the committed JSON, then run the auto wire-bit-minimality
+    gate over every committed entry.  Returns the failure count (0 = pass)."""
+    committed = _load().get("entries", {})
+    entry = committed.get(mesh_key)
+    if entry is None:
         print(f"collective_modes --check: no committed entry for {mesh_key}")
         return 1
     res = _measure(mesh_key)
     failures = 0
     for mode in MODES:
-        want = committed["bytes_per_mode"].get(mode)
+        want = entry["bytes_per_mode"].get(mode)
         got = res[mode]["collective_bytes"]
         if want is None:
             print(f"  {mode}: NEW (no committed bytes), got {got}")
@@ -157,6 +210,13 @@ def check(mesh_key: str = "2x4") -> int:
         status = "ok" if got <= want else "REGRESSED"
         failures += got > want
         print(f"  {mode}: committed={want} recomputed={got} [{status}]")
+    want_auto = entry.get("auto_resolves_to")
+    got_auto = res["auto_resolves_to"]
+    if want_auto is not None and got_auto != want_auto:
+        print(f"  auto: committed resolution {want_auto!r} != recomputed "
+              f"{got_auto!r} [REGRESSED]")
+        failures += 1
+    failures += _check_auto_minimal(committed)
     return failures
 
 
@@ -164,7 +224,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="2x4", choices=sorted(MESHES))
     ap.add_argument("--check", action="store_true",
-                    help="compare recomputed bytes against the committed JSON")
+                    help="compare recomputed bytes against the committed "
+                         "JSON + the auto byte-minimality gate")
     args = ap.parse_args()
     if args.check:
         n = check(args.mesh)

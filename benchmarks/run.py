@@ -37,7 +37,10 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="recompute the collective wire bytes and fail if any "
                          "mode regresses vs the committed "
-                         "BENCH_collective_modes.json")
+                         "BENCH_collective_modes.json, or if 'auto' resolves "
+                         "to a mode that is not wire-bit-minimal for its "
+                         "entry (bits/param — HLO bytes under-count scanned "
+                         "collectives)")
     args = ap.parse_args()
     if args.check:
         from benchmarks import collective_modes

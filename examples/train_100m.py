@@ -13,13 +13,15 @@ printed per round.
 import argparse
 import os
 
+from repro.config.base import COLLECTIVE_CHOICES  # jax-free
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--collective", default="int",
-                    choices=["paper", "int", "packed", "ring"])
+                    choices=list(COLLECTIVE_CHOICES))
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
     os.environ["XLA_FLAGS"] = (

@@ -170,6 +170,13 @@ class ModelConfig:
 # Paper-core configs: quantization / channel / energy / FL
 # ---------------------------------------------------------------------------
 
+# The distributed collective wire formats ``make_fl_round`` accepts ("auto"
+# resolves to a concrete mode at trace time).  Lives here — the one jax-free
+# module — so CLI launchers can build their --collective choices before jax
+# initializes; ``aggregation.COLLECTIVES`` derives from it.
+COLLECTIVE_CHOICES = ("paper", "int", "packed", "ring", "rsag", "auto")
+
+
 @dataclass(frozen=True)
 class QuantConfig:
     """Stochastic fixed-point quantization (paper §II-A/B).
@@ -188,6 +195,10 @@ class QuantConfig:
     #   "int"    — integer codes in the smallest int container (int8/16/32)
     #   "packed" — codes bit-packed into dense uint32 words (wire ≈ payload_bits)
     #   "ring"   — native n-bit ppermute ring, no guard bits (wire = d·n per hop)
+    #   "rsag"   — reduce-scatter + all-gather, growing n+⌈log2 h⌉ lane widths
+    #              (wire ≈ 2·d·(n+⌈log2 K⌉) regardless of cohort size)
+    #   "auto"   — byte-minimal concrete mode for (bits, cohort axis sizes),
+    #              resolved at trace time (aggregation.resolve_auto)
     wire_format: str = "f32"
 
     @property

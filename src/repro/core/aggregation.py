@@ -5,29 +5,35 @@ Pure forms (used by the MNIST simulator and tests):
   error_aware_aggregate — eq. 6: w + Σ α_k λ_k Δ_k / Σ α_k λ_k
 
 Collective forms (used inside the shard_map'd distributed FL round, one
-client cohort per ``data`` mesh shard).  Four wire formats, selected by
+client cohort per ``data`` mesh shard) are organised around a **WirePlan**:
+a plan object built ONCE from ``(collective, QuantConfig, mesh axes,
+axis sizes)`` by :func:`make_wire_plan` that resolves the "auto" cost-model
+mode, applies the degenerate fallbacks, and owns the wire accounting; the
+shared flatten→scale→quantize front-end and dequantize→renormalize→
+unflatten back-end live in :func:`aggregate`, and each wire format reduces
+to one small code-sum strategy in ``_REDUCERS``.  Six modes, selected by
 ``QuantConfig.wire_format`` / ``make_fl_round(collective=...)``:
 
-  psum_aggregate ("paper" / "f32")
+  "paper" / "f32"
       Paper-faithful: quantize-dequantize locally, f32 psum of the weighted
       survivors.  Wire = 32 bits/param, regardless of ``quant.bits`` — the
       §II-D2 ``payload_bits`` d·n accounting is *simulated*, not realised.
 
-  quantized_psum_aggregate ("int")
+  "int"
       Beyond-paper: the integer codes cross the wire in the smallest int
       container (int8/16/32) that can hold the shard sum.  Wire = 8-32
       bits/param — closer to d·n, but still one container per parameter.
 
-  packed_psum_aggregate ("packed")
+  "packed"
       The wire matches the paper's payload accounting: codes are biased
       unsigned and bit-packed into dense uint32 words with a
       ceil(log2(K))-bit guard per lane, so ONE u32 psum accumulates every
       bit-lane without cross-lane carries (per-bit-lane partial sums).
-      Wire = 32/⌊32/(n+⌈log2 K⌉)⌋ bits/param — e.g. 10.7 bits at n=8, K=2
+      Wire = 32/⌊32/(n+⌈log2 K⌉)⌋ bits/param — e.g. 10.7 at n=8, K=2
       vs 16 for "int" and 32 for "paper".  Numerically identical to "int"
       (same codes, same exact integer sum).
 
-  ring_psum_aggregate ("ring")
+  "ring"
       The guard bits go away: the whole code tree is concatenated, packed
       at the NATIVE n-bit lane, and circulated around the cohort ring with
       ``lax.ppermute`` — each hop unpacks the incoming buffer and
@@ -36,34 +42,60 @@ client cohort per ``data`` mesh shard).  Four wire formats, selected by
       re-packing the partial sums at n+⌈log2 m⌉ between levels.  Total
       wire = Σ_l (K_l−1)·32/⌊32/(n+⌈log2 m_l⌉)⌋ bits/param — e.g. 8 at
       n=8, K=2 (0.75x "packed") — best for the small cohort counts of the
-      hierarchical-FL meshes; the one-shot packed psum wins back for large
-      single-axis cohorts since the ring cost grows with K−1.  Numerically
-      identical to "int"/"packed" (same codes, same exact integer sum).
+      hierarchical-FL meshes, but the cost grows with K−1 hops of the FULL
+      vector.  Numerically identical to "int"/"packed".
 
-All four renormalize by psum(α·λ) (eq. 6) and degrade gracefully: with
+  "rsag"
+      True reduce-scatter + all-gather: the flat code vector splits into K
+      chunks of ceil(d/K); the scatter phase ships ONE chunk per hop at a
+      *growing* lane width (hop h carries partial sums of h codes in
+      n+⌈log2 h⌉-bit lanes), the gather phase redistributes the finished
+      chunks at the final n+⌈log2 K⌉ lane.  Total wire ≈
+      2·d·(n+⌈log2 K⌉)/K·(K−1) bits — capped near 2·d·(n+⌈log2 K⌉)
+      regardless of K, the large-K regime where the per-hop ring loses.
+      Equal-lane hop groups run as one ``lax.scan`` (payloads share a
+      lane-symmetric ``lane_bias`` so the pack/unpack constants stay
+      static).  Numerically identical to "int"/"packed"/"ring".
+
+  "auto"
+      Not a wire format: resolved AT TRACE TIME by :func:`resolve_auto` to
+      the byte-minimal concrete mode for the current (bits, axis sizes)
+      via :func:`wire_bits_per_param` — ring for small cohorts, packed/rsag
+      as K grows (e.g. ring on the 2x4 debug mesh, packed at 16x16).
+
+All modes renormalize by psum(α·λ) (eq. 6) and degrade gracefully: with
 quantization disabled (bits=0) or the uplink unquantized
-(quantize_uplink=False) every mode falls back to the f32 psum, and "packed"
-/ "ring" fall back to "int" when the lane would exceed the u32 container
-(huge bits x shards) — ``effective_wire_format`` reports the format that
-actually hits the wire so telemetry/energy charge the bytes really sent.
-When ``QuantConfig.use_pallas`` is set, the hot quantize→pack / unpack→
-dequantize / per-hop accumulate transforms run through the fused Pallas
-kernels in ``repro.kernels.pack`` (interpret mode on CPU), bit-exact with
-the pure-jnp path.
+(quantize_uplink=False) every mode falls back to the f32 psum, and
+"packed"/"ring"/"rsag" fall back to "int" when the lane would exceed the
+u32 container (huge bits x shards) — ``WirePlan.effective`` /
+``effective_wire_format`` report the format that actually hits the wire so
+telemetry/energy charge the bytes really sent (per phase via
+``wire_phase_bits_per_param``).  When ``QuantConfig.use_pallas`` is set,
+the hot transforms run through the fused Pallas kernels in
+``repro.kernels.pack`` (interpret mode on CPU), bit-exact with the
+pure-jnp path: quantize_pack/unpack_dequantize in the packed psum,
+quantize_pack + the mid-hop ``repack`` accumulate in the ring, and
+``pack_sums`` + ``repack`` (lane-bias variants) in the rsag phases.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import QuantConfig
+from repro.config.base import COLLECTIVE_CHOICES, QuantConfig
 from repro.core import quantization as quant
 
 PyTree = Any
 EPS = 1e-12
+
+#: concrete wire formats ("auto" is a resolution rule, not a format)
+COLLECTIVES = tuple(m for m in COLLECTIVE_CHOICES if m != "auto")
+#: candidate order for "auto" (first wins wire-bit ties)
+AUTO_ORDER = ("ring", "rsag", "packed", "int")
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +128,7 @@ def error_aware_aggregate(w: PyTree, deltas: PyTree, alphas: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# collective forms (inside shard_map, manual over `axes`)
+# wire accounting: what actually hits the wire per mode (incl. fallbacks)
 # ---------------------------------------------------------------------------
 
 def _int_container(bits: int, num_shards: int):
@@ -109,185 +141,313 @@ def _int_container(bits: int, num_shards: int):
     return jnp.int32
 
 
-def psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
-                   qcfg: QuantConfig, key, axes: Sequence[str]) -> PyTree:
-    """Paper-faithful collective: quantize-dequantize locally (the uplink
-    payload is n-bit), then float all-reduce of the weighted survivors."""
-    axes = tuple(axes)
-    if qcfg.enabled and qcfg.quantize_uplink:
-        delta = quant.quantize_tree(delta, key, qcfg)
-    w = (alpha * lam).astype(jnp.float32)
-    den = jax.lax.psum(w, axes)
+def resolve_auto(qcfg: QuantConfig, axis_sizes: Sequence[int]) -> str:
+    """The byte-minimal concrete mode for (bits, axis_sizes) — what the
+    "auto" collective lowers to.
 
-    def agg(dl):
-        num = jax.lax.psum(dl.astype(jnp.float32) * w, axes)
-        return num / jnp.maximum(den, EPS)
-
-    return jax.tree_util.tree_map(agg, delta)
-
-
-def quantized_psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
-                             qcfg: QuantConfig, key, axes: Sequence[str],
-                             num_shards: int) -> PyTree:
-    """Beyond-paper collective: int codes cross the wire.
-
-    codes_k = Q(α_k λ_k Δ_k · S) with S = num_shards (keeps magnitudes in the
-    quantizer's [-1,1] range when α ~ 1/S); all-reduce the ints exactly, then
-    dequantize once and renormalize by psum(α λ)·S.
+    Candidates are compared by :func:`wire_bits_per_param` (the honest
+    per-device total including every hop and the degenerate fallbacks);
+    ties go to the earlier entry of ``AUTO_ORDER``.  The winner is then
+    collapsed through :func:`effective_wire_format` so a pick whose lane
+    would overflow reports the int container it actually ships ("auto"
+    never resolves to a mode that silently falls back).
     """
-    axes = tuple(axes)
+    axis_sizes = tuple(int(s) for s in axis_sizes)
     if not (qcfg.enabled and qcfg.quantize_uplink):
-        return psum_aggregate(delta, alpha, lam, qcfg, key, axes)
-    container = _int_container(qcfg.bits, num_shards)
-    scale = float(num_shards)
-    w = (alpha * lam).astype(jnp.float32)
-    den = jax.lax.psum(w, axes)
-
-    leaves, treedef = jax.tree_util.tree_flatten(delta)
-    keys = jax.random.split(key, len(leaves))
-    out = []
-    for leaf, k in zip(leaves, keys):
-        codes = quant.quantize_codes(leaf.astype(jnp.float32) * (w * scale), k,
-                                     qcfg.bits, clip=qcfg.clip,
-                                     stochastic=qcfg.stochastic)
-        total = jax.lax.psum(codes.astype(container), axes)
-        deq = quant.dequantize_codes(total.astype(jnp.int32), qcfg.bits,
-                                     clip=qcfg.clip)
-        out.append(deq / (jnp.maximum(den, EPS) * scale))
-    return jax.tree_util.tree_unflatten(treedef, out)
+        return "paper"
+    best = min(AUTO_ORDER,
+               key=lambda m: wire_bits_per_param(m, qcfg, axis_sizes))
+    num_shards = 1
+    for s in axis_sizes:
+        num_shards *= s
+    return effective_wire_format(best, qcfg, num_shards,
+                                 axis_sizes=axis_sizes)
 
 
-def packed_psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
-                          qcfg: QuantConfig, key, axes: Sequence[str],
-                          num_shards: int) -> PyTree:
-    """Bit-packed collective: dense uint32 words cross the wire.
+def effective_wire_format(collective: str, qcfg: QuantConfig,
+                          num_shards: int, *,
+                          axis_sizes: Sequence[int] | None = None) -> str:
+    """The format that actually crosses the wire after degenerate fallbacks.
 
-    Each shard quantizes its weighted delta to n-bit codes exactly as in
-    :func:`quantized_psum_aggregate` (same PRNG stream -> identical codes),
-    biases them unsigned and packs them into uint32 words whose bit-lanes
-    are ``n + ceil(log2(num_shards))`` wide.  A single u32 psum then sums
-    every bit-lane across shards with no cross-lane carries; unpacking
-    recovers Σ_k codes_k exactly (minus the K·G bias), so the result is
-    bit-identical to the "int" mode at a fraction of the wire bytes.
-
-    Dropped shards (λ=0) quantize a zero delta to the zero code
-    deterministically (floor(0+u)=0 for u<1), so every shard contributes
-    exactly one +G bias per lane — the unbias is a constant K·G.
-
-    With ``qcfg.use_pallas`` the quantize→bias→pack and unpack→unbias→
-    dequantize transforms run through the fused Pallas kernels
-    (``kernels.pack.quantize_pack`` / ``unpack_dequantize``), bit-exact
-    with the pure path (same key -> same rounding noise -> same words).
+    "int"/"packed"/"ring"/"rsag" degrade to "paper" (f32 psum) when the
+    uplink is not quantized, and "packed"/"ring"/"rsag" degrade to "int"
+    when the psum lane / register tree would overflow its 32-bit container.
+    "auto" is first resolved to its concrete pick (``axis_sizes`` defaults
+    to the single-axis ``(num_shards,)`` cohort).  Telemetry and energy
+    accounting must charge THIS format's bytes, not the requested one
+    (otherwise the lane>32 fallback silently under-reports the wire).
     """
-    axes = tuple(axes)
+    if collective == "auto":
+        collective = resolve_auto(
+            qcfg, axis_sizes if axis_sizes is not None else (num_shards,))
+    if collective not in COLLECTIVES:
+        raise ValueError(f"unknown collective {collective!r}")
+    if collective == "paper":
+        return "paper"
     if not (qcfg.enabled and qcfg.quantize_uplink):
-        return psum_aggregate(delta, alpha, lam, qcfg, key, axes)
-    lane = quant.packed_lane_bits(qcfg.bits, num_shards)
-    if lane > 32:  # degenerate (huge bits x shards): int container is denser
-        return quantized_psum_aggregate(delta, alpha, lam, qcfg, key, axes,
-                                        num_shards)
-    scale = float(num_shards)
-    w = (alpha * lam).astype(jnp.float32)
-    den = jax.lax.psum(w, axes)
-
-    leaves, treedef = jax.tree_util.tree_flatten(delta)
-    keys = jax.random.split(key, len(leaves))
-    out = []
-    for leaf, k in zip(leaves, keys):
-        x = leaf.astype(jnp.float32) * (w * scale)
-        if qcfg.use_pallas:
-            from repro.kernels import ops as kops
-            words = kops.quantize_pack(x, k, qcfg.bits, clip=qcfg.clip,
-                                       lane_bits=lane,
-                                       stochastic=qcfg.stochastic)
-            total = jax.lax.psum(words, axes)              # u32 on the wire
-            deq = kops.unpack_dequantize(total, qcfg.bits, leaf.size,
-                                         clip=qcfg.clip, lane_bits=lane,
-                                         sum_of=num_shards).reshape(leaf.shape)
-        else:
-            codes = quant.quantize_codes(x, k, qcfg.bits, clip=qcfg.clip,
-                                         stochastic=qcfg.stochastic)
-            words = quant.pack_codes(codes, qcfg.bits, lane_bits=lane)
-            total = jax.lax.psum(words, axes)              # u32 on the wire
-            code_sum = quant.unpack_codes(total, qcfg.bits, leaf.size,
-                                          lane_bits=lane, sum_of=num_shards)
-            deq = quant.dequantize_codes(code_sum.reshape(leaf.shape),
-                                         qcfg.bits, clip=qcfg.clip)
-        out.append(deq / (jnp.maximum(den, EPS) * scale))
-    return jax.tree_util.tree_unflatten(treedef, out)
+        return "paper"
+    if (collective in ("packed", "ring", "rsag")
+            and quant.packed_lane_bits(qcfg.bits, num_shards) > 32):
+        return "int"
+    return collective
 
 
-def ring_psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
-                        qcfg: QuantConfig, key, axes: Sequence[str],
-                        axis_sizes: Sequence[int]) -> PyTree:
-    """Ring collective at NATIVE bit-width: raw codes circle the cohort.
+def wire_phase_bits_per_param(collective: str, qcfg: QuantConfig,
+                              axis_sizes: Sequence[int]) -> Dict[str, float]:
+    """Per-device wire bits per parameter, split by collective PHASE.
 
-    Every shard quantizes its weighted delta to the exact same codes as the
-    "int"/"packed" modes (same PRNG stream), concatenates all leaves into
-    one flat vector and packs it at the native ``bits`` lane — no guard
-    bits.  ``lax.ppermute`` then shifts the packed buffer one position
-    around the ring per hop (a ``lax.scan`` over K−1 hops); each shard
-    unpacks whatever arrives and adds it into a flat int32 register tree
-    (``kernels.pack.repack`` when ``use_pallas`` — unpack + accumulate in
-    one VMEM pass).  After K−1 hops every shard holds Σ_k codes_k exactly,
-    so the result is bit-identical to "int"/"packed" while each hop ships
-    ~``bits`` bits/param instead of the guard-widened psum lanes.
-
-    Multi-axis cohorts (e.g. ("pod", "data")) run one ring per axis: after
-    finishing a level the register tree holds partial sums of m codes,
-    which the next level re-packs at lane ``bits + ceil(log2 m)`` (bias
-    m·G) and circulates the same way — still exact.
+    One-shot psum modes ship everything in a single phase ({"psum": b});
+    the ring charges its hop total as {"ring_hops": b}; rsag splits into
+    {"reduce_scatter": b_rs, "all_gather": b_ag} — the growing-lane scatter
+    hops vs the final-lane gather redistribution — so energy/latency models
+    can charge phases with different radio duty cycles separately.  Values
+    sum to :func:`wire_bits_per_param`.
     """
+    axis_sizes = tuple(int(s) for s in axis_sizes)
+    num_shards = 1
+    for s in axis_sizes:
+        num_shards *= s
+    eff = effective_wire_format(collective, qcfg, num_shards,
+                                axis_sizes=axis_sizes)
+    if eff == "paper":
+        return {"psum": 32.0}
+    if eff == "int":
+        container = _int_container(qcfg.bits, num_shards)
+        return {"psum": {jnp.int8: 8.0, jnp.int16: 16.0,
+                         jnp.int32: 32.0}[container]}
+    if eff == "packed":
+        lane = quant.packed_lane_bits(qcfg.bits, num_shards)
+        return {"psum": 32.0 / (32 // lane)}
+    if eff == "ring":
+        total, m = 0.0, 1
+        for k in axis_sizes:
+            if k <= 1:
+                continue
+            lane = quant.packed_lane_bits(qcfg.bits, m)
+            total += (k - 1) * 32.0 / (32 // lane)
+            m *= k
+        return {"ring_hops": total}
+    rs, ag, m = 0.0, 0.0, 1  # rsag: chunk = 1/K of the vector per hop
+    for k in axis_sizes:
+        if k <= 1:
+            continue
+        for h in range(1, k):
+            lane = quant.packed_lane_bits(qcfg.bits, m * h)
+            rs += 32.0 / (32 // lane) / k
+        lane_k = quant.packed_lane_bits(qcfg.bits, m * k)
+        ag += (k - 1) * 32.0 / (32 // lane_k) / k
+        m *= k
+    return {"reduce_scatter": rs, "all_gather": ag}
+
+
+def wire_bits_per_param(collective: str, qcfg: QuantConfig,
+                        axis_sizes: Sequence[int]) -> float:
+    """Per-device wire bits per parameter actually sent by the collective
+    (after fallbacks), summed over every hop/phase.
+
+    "paper" charges the f32 psum payload (32); "int" the integer container;
+    "packed" the guard-lane u32 words; "ring" (K_l−1) full-vector hops per
+    level at the level's lane width; "rsag" the growing-lane chunk hops of
+    both phases; "auto" whatever it resolves to.  The psum modes ship each
+    param once per device (the all-reduce doubling is a topology cost,
+    charged in utils/flops).
+    """
+    return sum(wire_phase_bits_per_param(collective, qcfg,
+                                         axis_sizes).values())
+
+
+# ---------------------------------------------------------------------------
+# WirePlan: everything the collective needs, decided once at trace time
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class WirePlan:
+    """Static plan for one distributed aggregation.
+
+    ``mode`` is what the caller asked for (possibly "auto"); ``resolved``
+    the concrete mode "auto" picked (== mode otherwise); ``effective`` the
+    format that actually hits the wire after the degenerate fallbacks —
+    the key ``_REDUCERS`` dispatches on and the one whose bytes
+    ``wire_bits`` charges.
+    """
+    mode: str
+    resolved: str
+    effective: str
+    quant: QuantConfig
+    axes: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+    num_shards: int
+    wire_bits: float
+
+
+def make_wire_plan(collective: str, qcfg: QuantConfig,
+                   axes: Sequence[str],
+                   axis_sizes: Sequence[int]) -> WirePlan:
+    """Build the aggregation plan: resolve "auto", apply fallbacks, price
+    the wire.  Pure Python — safe to call at trace time (``make_fl_round``)
+    or from host-side accounting (dryrun / energy / benchmarks)."""
     axes = tuple(axes)
     axis_sizes = tuple(int(s) for s in axis_sizes)
     num_shards = 1
     for s in axis_sizes:
         num_shards *= s
-    if not (qcfg.enabled and qcfg.quantize_uplink):
-        return psum_aggregate(delta, alpha, lam, qcfg, key, axes)
-    if quant.packed_lane_bits(qcfg.bits, num_shards) > 32:
-        # degenerate (huge bits x shards): the int32 register tree itself
-        # could not hold the shard sum — same fallback rule as "packed"
-        return quantized_psum_aggregate(delta, alpha, lam, qcfg, key, axes,
-                                        num_shards)
-    bits = qcfg.bits
-    scale = float(num_shards)
+    resolved = (resolve_auto(qcfg, axis_sizes) if collective == "auto"
+                else collective)
+    if resolved not in COLLECTIVES:
+        raise ValueError(f"unknown collective {resolved!r}")
+    effective = effective_wire_format(resolved, qcfg, num_shards,
+                                      axis_sizes=axis_sizes)
+    wire_bits = wire_bits_per_param(resolved, qcfg, axis_sizes)
+    return WirePlan(mode=collective, resolved=resolved, effective=effective,
+                    quant=qcfg, axes=axes, axis_sizes=axis_sizes,
+                    num_shards=num_shards, wire_bits=wire_bits)
+
+
+# ---------------------------------------------------------------------------
+# plan execution: shared front/back-end + per-mode code-sum strategies
+# ---------------------------------------------------------------------------
+
+def aggregate(plan: WirePlan, delta: PyTree, alpha: jnp.ndarray,
+              lam: jnp.ndarray, key) -> PyTree:
+    """Run the planned collective inside shard_map (manual over plan.axes).
+
+    Every quantized mode quantizes the weighted delta to the exact same
+    integer codes (same per-leaf PRNG streams) and computes the exact
+    integer sum over the cohort, so the aggregated model is bit-identical
+    across "int"/"packed"/"ring"/"rsag" — only the wire differs.
+    """
+    if plan.effective == "paper":
+        return _exec_paper(plan, delta, alpha, lam, key)
+    qcfg = plan.quant
+    scale = float(plan.num_shards)
     w = (alpha * lam).astype(jnp.float32)
-    den = jax.lax.psum(w, axes)
+    den = jax.lax.psum(w, plan.axes)
 
     leaves, treedef = jax.tree_util.tree_flatten(delta)
     keys = jax.random.split(key, len(leaves))
+    xs = [leaf.astype(jnp.float32) * (w * scale) for leaf in leaves]
     n = sum(leaf.size for leaf in leaves)
+    deq = _REDUCERS[plan.effective](plan, xs, keys, n)  # flat f32 Σ codes / G
+    deq = deq / (jnp.maximum(den, EPS) * scale)
 
+    out, offset = [], 0
+    for leaf in leaves:
+        out.append(deq[offset: offset + leaf.size].reshape(leaf.shape))
+        offset += leaf.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _exec_paper(plan: WirePlan, delta, alpha, lam, key) -> PyTree:
+    """Paper-faithful collective: quantize-dequantize locally (the uplink
+    payload is n-bit), then float all-reduce of the weighted survivors."""
+    qcfg = plan.quant
+    if qcfg.enabled and qcfg.quantize_uplink:
+        delta = quant.quantize_tree(delta, key, qcfg)
+    w = (alpha * lam).astype(jnp.float32)
+    den = jax.lax.psum(w, plan.axes)
+
+    def agg(dl):
+        num = jax.lax.psum(dl.astype(jnp.float32) * w, plan.axes)
+        return num / jnp.maximum(den, EPS)
+
+    return jax.tree_util.tree_map(agg, delta)
+
+
+def _flat_codes(plan: WirePlan, xs: List[jax.Array],
+                keys: jax.Array) -> jax.Array:
+    """Quantize every (weighted, scaled) leaf with its own PRNG stream and
+    concatenate — the codes every quantized mode agrees on bit-for-bit.
+    ``use_pallas`` routes through the quantize kernel (same key -> same
+    rounding noise -> same codes as the pure path)."""
+    qcfg = plan.quant
     if qcfg.use_pallas:
         from repro.kernels import ops as kops
-        xcat = jnp.concatenate([
-            (leaf.astype(jnp.float32) * (w * scale)).reshape(-1)
-            for leaf in leaves])
-        ucat = jnp.concatenate([
-            jax.random.uniform(k, leaf.shape, dtype=jnp.float32).reshape(-1)
-            for leaf, k in zip(leaves, keys)])
+        return jnp.concatenate([
+            kops.stochastic_quantize_codes(
+                x, k, qcfg.bits, clip=qcfg.clip,
+                stochastic=qcfg.stochastic).reshape(-1)
+            for x, k in zip(xs, keys)])
+    return jnp.concatenate([
+        quant.quantize_codes(x, k, qcfg.bits, clip=qcfg.clip,
+                             stochastic=qcfg.stochastic).reshape(-1)
+        for x, k in zip(xs, keys)])
+
+
+def _flat_noise(xs: List[jax.Array], keys: jax.Array) -> jax.Array:
+    """The concatenated per-leaf rounding-noise streams (what the fused
+    quantize+pack kernels consume so their codes match the pure path)."""
+    return jnp.concatenate([
+        jax.random.uniform(k, x.shape, dtype=jnp.float32).reshape(-1)
+        for x, k in zip(xs, keys)])
+
+
+def _reduce_int(plan: WirePlan, xs, keys, n: int) -> jax.Array:
+    """codes cross the wire in the smallest int container (one psum)."""
+    qcfg = plan.quant
+    codes = _flat_codes(plan, xs, keys)
+    container = _int_container(qcfg.bits, plan.num_shards)
+    total = jax.lax.psum(codes.astype(container), plan.axes)
+    return quant.dequantize_codes(total.astype(jnp.int32), qcfg.bits,
+                                  clip=qcfg.clip)
+
+
+def _reduce_packed(plan: WirePlan, xs, keys, n: int) -> jax.Array:
+    """guard-lane u32 psum: one bit-packed word vector crosses the wire.
+
+    Dropped shards (λ=0) quantize a zero delta to the zero code
+    deterministically (floor(0+u)=0 for u<1), so every shard contributes
+    exactly one +G bias per lane — the unbias is a constant K·G.
+    """
+    qcfg = plan.quant
+    lane = quant.packed_lane_bits(qcfg.bits, plan.num_shards)
+    if qcfg.use_pallas:
+        from repro.kernels import ops as kops
+        xcat = jnp.concatenate([x.reshape(-1) for x in xs])
+        words = kops.quantize_pack(xcat, None, qcfg.bits, clip=qcfg.clip,
+                                   lane_bits=lane, stochastic=qcfg.stochastic,
+                                   u=_flat_noise(xs, keys))
+        total = jax.lax.psum(words, plan.axes)          # u32 on the wire
+        return kops.unpack_dequantize(total, qcfg.bits, n, clip=qcfg.clip,
+                                      lane_bits=lane,
+                                      sum_of=plan.num_shards)
+    codes = _flat_codes(plan, xs, keys)
+    words = quant.pack_codes(codes, qcfg.bits, lane_bits=lane)
+    total = jax.lax.psum(words, plan.axes)              # u32 on the wire
+    code_sum = quant.unpack_codes(total, qcfg.bits, n, lane_bits=lane,
+                                  sum_of=plan.num_shards)
+    return quant.dequantize_codes(code_sum, qcfg.bits, clip=qcfg.clip)
+
+
+def _reduce_ring(plan: WirePlan, xs, keys, n: int) -> jax.Array:
+    """native-width ppermute ring: the full packed vector circles the
+    cohort, each hop accumulating into an int32 register tree; multi-axis
+    cohorts run nested rings re-packed at the sum width between levels."""
+    qcfg = plan.quant
+    bits = qcfg.bits
+    if qcfg.use_pallas:
+        from repro.kernels import ops as kops
+        xcat = jnp.concatenate([x.reshape(-1) for x in xs])
         buf = kops.quantize_pack(xcat, None, bits, clip=qcfg.clip,
                                  lane_bits=bits, stochastic=qcfg.stochastic,
-                                 u=ucat)
+                                 u=_flat_noise(xs, keys))
         # own codes = exact unpack of the freshly packed buffer
         acc = kops.repack(buf, jnp.zeros((n,), jnp.int32), bits, n,
                           lane_bits=bits, sum_of=1)
     else:
-        acc = jnp.concatenate([
-            quant.quantize_codes(leaf.astype(jnp.float32) * (w * scale), k,
-                                 bits, clip=qcfg.clip,
-                                 stochastic=qcfg.stochastic).reshape(-1)
-            for leaf, k in zip(leaves, keys)])
+        acc = _flat_codes(plan, xs, keys)
         buf = quant.pack_codes(acc, bits, lane_bits=bits)
 
     m = 1  # codes per register so far (partial-sum multiplicity)
-    for axis, K in zip(axes, axis_sizes):
+    for axis, K in zip(plan.axes, plan.axis_sizes):
         if K <= 1:
             continue
         lane = quant.packed_lane_bits(bits, m)
         if m > 1:  # level transition: re-pack partial sums at the sum width
-            buf = quant.pack_codes(acc, bits, lane_bits=lane, sum_of=m)
+            if qcfg.use_pallas:
+                from repro.kernels import ops as kops
+                buf = kops.pack_sums(acc, bits, lane_bits=lane, sum_of=m)
+            else:
+                buf = quant.pack_codes(acc, bits, lane_bits=lane, sum_of=m)
         perm = [(j, (j + 1) % K) for j in range(K)]
 
         def hop(carry, _, *, axis=axis, lane=lane, m=m):
@@ -303,70 +463,104 @@ def ring_psum_aggregate(delta: PyTree, alpha: jnp.ndarray, lam: jnp.ndarray,
 
         (buf, acc), _ = jax.lax.scan(hop, (buf, acc), None, length=K - 1)
         m *= K
-
-    out, offset = [], 0
-    for leaf in leaves:
-        code_sum = acc[offset: offset + leaf.size].reshape(leaf.shape)
-        offset += leaf.size
-        deq = quant.dequantize_codes(code_sum, bits, clip=qcfg.clip)
-        out.append(deq / (jnp.maximum(den, EPS) * scale))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return quant.dequantize_codes(acc, bits, clip=qcfg.clip)
 
 
-# ---------------------------------------------------------------------------
-# wire accounting: what actually hits the wire per mode (incl. fallbacks)
-# ---------------------------------------------------------------------------
+def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
+                unit: int, n: int) -> jax.Array:
+    """One reduce-scatter + all-gather level over cohort axis ``axis``.
 
-def effective_wire_format(collective: str, qcfg: QuantConfig,
-                          num_shards: int) -> str:
-    """The format that actually crosses the wire after degenerate fallbacks.
-
-    "int"/"packed"/"ring" degrade to "paper" (f32 psum) when the uplink is
-    not quantized, and "packed"/"ring" degrade to "int" when the psum lane
-    / register tree would overflow its 32-bit container.  Telemetry and
-    energy accounting must charge THIS format's bytes, not the requested
-    one (otherwise the lane>32 fallback silently under-reports the wire).
+    ``codes`` holds flat partial sums of ``unit`` codes; returns flat sums
+    of ``unit``·K.  The vector splits into K chunks of C = ceil(n/K) (the
+    pad tail rides along as zero codes).  Scatter hop h ships ONE chunk of
+    partial sums of ``unit``·h codes at lane n+⌈log2(unit·h)⌉; the gather
+    phase redistributes the finished chunks at the final lane.  Every
+    payload at lane L is biased by the lane-symmetric ``lane_bias(L)``
+    (not the count-dependent m·G) so all hops of an equal-lane group share
+    static pack/unpack constants and run as ONE ``lax.scan`` — the traced
+    collective count stays O(log K) instead of O(K).
     """
-    if collective not in ("paper", "int", "packed", "ring"):
-        raise ValueError(f"unknown collective {collective!r}")
-    if collective == "paper":
-        return "paper"
-    if not (qcfg.enabled and qcfg.quantize_uplink):
-        return "paper"
-    if (collective in ("packed", "ring")
-            and quant.packed_lane_bits(qcfg.bits, num_shards) > 32):
-        return "int"
-    return collective
+    qcfg = plan.quant
+    bits = qcfg.bits
+    C = -(-n // K)
+    chunks = jnp.pad(codes, (0, K * C - n)).reshape(K, C)
+    idx = jax.lax.axis_index(axis)
+    perm = [(j, (j + 1) % K) for j in range(K)]
+
+    def pack_fn(c, lane):
+        b = quant.lane_bias(lane)
+        if qcfg.use_pallas:
+            from repro.kernels import ops as kops
+            return kops.pack_sums(c, bits, lane_bits=lane, bias=b)
+        return quant.pack_codes(c, bits, lane_bits=lane, bias=b)
+
+    def unpack_add_fn(words, chunk, lane):
+        b = quant.lane_bias(lane)
+        if qcfg.use_pallas:
+            from repro.kernels import ops as kops
+            return kops.repack(words, chunk, bits, C, lane_bits=lane, bias=b)
+        return chunk + quant.unpack_codes(words, bits, C, lane_bits=lane,
+                                          bias=b)
+
+    def chunk_at(i):
+        return jax.lax.dynamic_slice(chunks, (i, 0), (1, C))[0]
+
+    def hop(carry, h, lane):
+        # carry: partial sums of unit·h codes for chunk (idx-(h-1)) mod K;
+        # after the permute+accumulate: unit·(h+1) for chunk (idx-h) mod K
+        recv = jax.lax.ppermute(pack_fn(carry, lane), axis, perm)
+        return unpack_add_fn(recv, chunk_at((idx - h) % K), lane)
+
+    # ---- reduce-scatter: hops grouped by (equal) lane width --------------
+    groups: List[Tuple[int, List[int]]] = []
+    for h in range(1, K):
+        lane = quant.packed_lane_bits(bits, unit * h)
+        if groups and groups[-1][0] == lane:
+            groups[-1][1].append(h)
+        else:
+            groups.append((lane, [h]))
+    carry = chunk_at(idx)
+    for lane, hs in groups:
+        if len(hs) == 1:
+            carry = hop(carry, hs[0], lane)
+        else:
+            carry, _ = jax.lax.scan(
+                lambda c, h, lane=lane: (hop(c, h, lane), None),
+                carry, jnp.arange(hs[0], hs[-1] + 1))
+    # carry now holds the FULL sum (unit·K codes) of chunk (idx+1) mod K
+
+    # ---- all-gather: redistribute finished chunks at the final lane ------
+    lane_k = quant.packed_lane_bits(bits, unit * K)
+    bias_k = quant.lane_bias(lane_k)
+    out = jnp.zeros((K, C), jnp.int32)
+    out = jax.lax.dynamic_update_slice(out, carry[None], ((idx + 1) % K, 0))
+    buf = pack_fn(carry, lane_k)
+
+    def gather(state, t):
+        b, o = state
+        b = jax.lax.ppermute(b, axis, perm)
+        c = quant.unpack_codes(b, bits, C, lane_bits=lane_k, bias=bias_k)
+        o = jax.lax.dynamic_update_slice(o, c[None], ((idx + 1 - t) % K, 0))
+        return (b, o), None
+
+    (_, out), _ = jax.lax.scan(gather, (buf, out), jnp.arange(1, K))
+    return out.reshape(-1)[:n]
 
 
-def wire_bits_per_param(collective: str, qcfg: QuantConfig,
-                        axis_sizes: Sequence[int]) -> float:
-    """Per-device wire bits per parameter actually sent by the collective
-    (after fallbacks), summed over every hop for the ring.
-
-    "paper" charges the f32 psum payload (32); "int" the integer container;
-    "packed" the guard-lane u32 words; "ring" (K_l−1) hops per level at the
-    level's lane width.  The psum modes ship each param once per device
-    (the all-reduce doubling is a topology cost, charged in utils/flops).
-    """
-    axis_sizes = tuple(int(s) for s in axis_sizes)
-    num_shards = 1
-    for s in axis_sizes:
-        num_shards *= s
-    eff = effective_wire_format(collective, qcfg, num_shards)
-    if eff == "paper":
-        return 32.0
-    if eff == "int":
-        container = _int_container(qcfg.bits, num_shards)
-        return {jnp.int8: 8.0, jnp.int16: 16.0, jnp.int32: 32.0}[container]
-    if eff == "packed":
-        lane = quant.packed_lane_bits(qcfg.bits, num_shards)
-        return 32.0 / (32 // lane)
-    total, m = 0.0, 1
-    for k in axis_sizes:
-        if k <= 1:
+def _reduce_rsag(plan: WirePlan, xs, keys, n: int) -> jax.Array:
+    """reduce-scatter + all-gather with growing lane widths (see
+    :func:`_rsag_level`); multi-axis cohorts run one level per axis, the
+    partial-sum multiplicity compounding like the ring's nested levels."""
+    codes = _flat_codes(plan, xs, keys)
+    unit = 1
+    for axis, K in zip(plan.axes, plan.axis_sizes):
+        if K <= 1:
             continue
-        lane = quant.packed_lane_bits(qcfg.bits, m)
-        total += (k - 1) * 32.0 / (32 // lane)
-        m *= k
-    return total
+        codes = _rsag_level(plan, codes, axis, int(K), unit, n)
+        unit *= int(K)
+    return quant.dequantize_codes(codes, plan.quant.bits,
+                                  clip=plan.quant.clip)
+
+
+_REDUCERS = {"int": _reduce_int, "packed": _reduce_packed,
+             "ring": _reduce_ring, "rsag": _reduce_rsag}

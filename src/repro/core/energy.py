@@ -42,6 +42,33 @@ def uplink_energy_j(ch_cfg: ChannelConfig, num_params: int, bits: int,
     return tau * p
 
 
+def uplink_phase_energy_j(ch_cfg: ChannelConfig, num_params: int,
+                          phase_bits_per_param: "dict[str, float]",
+                          rate_bps_hz: jnp.ndarray,
+                          tx_power_w: jnp.ndarray | None = None
+                          ) -> "dict[str, jnp.ndarray]":
+    """eq. 9 itemized per collective phase.
+
+    ``phase_bits_per_param`` is the mapping from
+    ``aggregation.wire_phase_bits_per_param`` — e.g. the rsag collective's
+    {"reduce_scatter": ..., "all_gather": ...} — and each phase is charged
+    as an independent transmission at the achieved rate, so radio duty
+    cycles (or future per-phase power levels) can be modelled separately.
+    No per-phase 1-bit floor is applied (a sub-bit phase of a short
+    collective leg is charged its true fraction), so the values sum to
+    ``uplink_energy_j(wire_bits_per_param=Σ phases)`` whenever the total
+    clears that function's 1-bit floor — true for every realisable wire
+    format.
+    """
+    p = ch_cfg.tx_power_w if tx_power_w is None else tx_power_w
+    out = {}
+    for phase, bits in phase_bits_per_param.items():
+        payload = jnp.asarray(num_params, jnp.float32) * bits
+        tau = ch.transmission_time_s(payload, ch_cfg.bandwidth_hz, rate_bps_hz)
+        out[phase] = tau * p
+    return out
+
+
 def uplink_time_s(ch_cfg: ChannelConfig, num_params: int, bits: int,
                   rate_bps_hz: jnp.ndarray,
                   wire_bits_per_param: float | None = None) -> jnp.ndarray:

@@ -35,16 +35,32 @@ Two runtimes share the same math:
                    ring (``lax.ppermute``) packed at the NATIVE n-bit
                    lane; each hop accumulates into an int32 register
                    tree, so the wire is the paper's d·n floor per hop —
-                   e.g. 8 bits/param at n=8, K=2 (0.75x "packed").
+                   e.g. 8 bits/param at n=8, K=2 (0.75x "packed") — but
+                   the cost grows with K−1 full-vector hops.
+    "rsag"         true reduce-scatter + all-gather: one 1/K chunk per
+                   hop at a GROWING lane width (hop h carries partial
+                   sums of h codes in n+⌈log2 h⌉-bit lanes), finished
+                   chunks redistributed at the final n+⌈log2 K⌉ lane —
+                   ~2·(n+⌈log2 K⌉) bits/param regardless of K, the
+                   large-K cap the per-hop ring lacks (28.5 vs the
+                   ring's 120 bits/param at n=8, K=16).
+    "auto"         resolved at trace time to the byte-minimal concrete
+                   mode for the current (bits, cohort axis sizes) via
+                   ``aggregation.resolve_auto`` — ring on the 2x4 debug
+                   mesh (8 bits/param), packed on the 16x16 production
+                   mesh (16 bits/param).
 
   Every quantized mode produces the bit-identical aggregated model (same
   codes, same exact integer sum).  The round metrics carry
   ``wire_bits_per_param`` — the bits that actually hit the wire after
-  degenerate fallbacks (see ``aggregation.effective_wire_format``) — so
-  energy accounting charges what was really sent.
+  "auto" resolution and degenerate fallbacks (see
+  ``aggregation.make_wire_plan`` / ``effective_wire_format``) — so energy
+  accounting charges what was really sent, per phase via
+  ``aggregation.wire_phase_bits_per_param``.
 
-  See ``aggregation.py`` for the four collective implementations and
-  ``quantization.pack_codes`` / ``kernels/pack.py`` for the wire formats.
+  See ``aggregation.py`` for the WirePlan abstraction the six modes hang
+  off and ``quantization.pack_codes`` / ``kernels/pack.py`` for the wire
+  formats.
 """
 from __future__ import annotations
 
@@ -56,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.config import base as base_mod
 from repro.config.base import Config
 from repro.core import aggregation as agg
 from repro.core import channel as ch
@@ -282,7 +299,10 @@ def fl_data_axes(mesh, config: Optional[Config] = None) -> Tuple[str, ...]:
 
 
 _WIRE_TO_COLLECTIVE = {"f32": "paper", "int": "int", "packed": "packed",
-                       "ring": "ring"}
+                       "ring": "ring", "rsag": "rsag", "auto": "auto"}
+#: every value make_fl_round accepts ("auto" resolves to a concrete mode);
+#: canonical tuple lives jax-free in config.base for the CLI launchers
+COLLECTIVE_CHOICES = base_mod.COLLECTIVE_CHOICES
 
 
 def resolve_collective(config: Config, collective: Optional[str]) -> str:
@@ -293,7 +313,7 @@ def resolve_collective(config: Config, collective: Optional[str]) -> str:
             raise ValueError(
                 f"unknown quant.wire_format {config.quant.wire_format!r}; "
                 f"expected one of {sorted(_WIRE_TO_COLLECTIVE)}")
-    if collective not in ("paper", "int", "packed", "ring"):
+    if collective not in COLLECTIVE_CHOICES:
         raise ValueError(f"unknown collective {collective!r}")
     return collective
 
@@ -305,15 +325,17 @@ def make_fl_round(model, config: Config, mesh, *,
     collective: "paper" (f32 wire, faithful) | "int" (integer-code wire)
     | "packed" (bit-packed uint32 wire, matching the paper's payload_bits
     accounting) | "ring" (native-width ppermute ring, no guard bits)
+    | "rsag" (reduce-scatter + all-gather, growing lane widths)
+    | "auto" (cost-model pick of the byte-minimal mode for this mesh)
     | None (the default — resolve ``config.quant.wire_format``).
 
     Returned fn: (params, batch, rng) -> (params, metrics).
     ``batch`` leaves are (global_batch, ...) sharded over the data axes;
     each shard is one client cohort.  ``metrics["wire_bits_per_param"]``
     reports the bits each device actually puts on the wire per parameter
-    (after degenerate fallbacks — e.g. "packed" silently becomes "int"
-    when the guard lane exceeds 32 bits), the number energy accounting
-    must charge.
+    (after "auto" resolution and degenerate fallbacks — e.g. "packed"
+    silently becomes "int" when the guard lane exceeds 32 bits), the
+    number energy accounting must charge.
     """
     fl = config.fl
     qcfg = config.quant
@@ -325,7 +347,8 @@ def make_fl_round(model, config: Config, mesh, *,
         return None
     axis_sizes = tuple(int(mesh.shape[a]) for a in axes)
     num_shards = int(np.prod(axis_sizes))
-    wire_bits = agg.wire_bits_per_param(collective, qcfg, axis_sizes)
+    plan = agg.make_wire_plan(collective, qcfg, axes, axis_sizes)
+    wire_bits = plan.wire_bits
     eta = fl.learning_rate
 
     def local_round(params, batch, rng):
@@ -357,17 +380,7 @@ def make_fl_round(model, config: Config, mesh, *,
                                        config.channel.error_prob)
         alpha = jnp.float32(1.0 / num_shards)
         k_q = jax.random.fold_in(rng, 13)
-        if collective == "int":
-            agg_delta = agg.quantized_psum_aggregate(delta, alpha, lam, qcfg,
-                                                     k_q, axes, num_shards)
-        elif collective == "packed":
-            agg_delta = agg.packed_psum_aggregate(delta, alpha, lam, qcfg,
-                                                  k_q, axes, num_shards)
-        elif collective == "ring":
-            agg_delta = agg.ring_psum_aggregate(delta, alpha, lam, qcfg,
-                                                k_q, axes, axis_sizes)
-        else:
-            agg_delta = agg.psum_aggregate(delta, alpha, lam, qcfg, k_q, axes)
+        agg_delta = agg.aggregate(plan, delta, alpha, lam, k_q)
 
         new_params = jax.tree_util.tree_map(
             lambda w, d: w + d.astype(w.dtype), params, agg_delta)

@@ -73,7 +73,7 @@ class EnergyObjective:
     def penalized(self, p_tx: float, q: float, bits: float) -> float:
         m = self.evaluate(p_tx, q, bits)
         viol = max(0.0, m["tau_pr_s"] - self.config.fl.tau_limit_s)
-        return m["energy_j"] + self.penalty * viol * viol * self.num_params ** 0
+        return m["energy_j"] + self.penalty * viol * viol
 
 
 @dataclass

@@ -19,9 +19,11 @@ Beyond the paper's math, this module owns the *wire format*: ``pack_codes``
 word, planar bit-lanes) so the simulated collective payload matches the
 paper's §II-D2 ``payload_bits`` accounting instead of shipping one int16/32
 container per parameter.  See ``packed_payload_bits`` /
-``ring_payload_bits`` for the exact wire sizes of the one-shot guard-lane
-psum and the per-hop native-width ring, and ``repro.kernels.pack`` for the
-fused Pallas quantize-and-pack / unpack-and-dequantize / repack kernels.
+``ring_payload_bits`` / ``rsag_payload_bits`` for the exact wire sizes of
+the one-shot guard-lane psum, the per-hop native-width ring, and the
+reduce-scatter+all-gather with growing lanes, and ``repro.kernels.pack``
+for the fused Pallas quantize-and-pack / unpack-and-dequantize / repack /
+pack-sums kernels.
 """
 from __future__ import annotations
 
@@ -115,7 +117,7 @@ def dequantize_tree_codes(codes: PyTree, cfg: QuantConfig, dtype=jnp.float32) ->
 # aggregating collective passes ``bits + ceil(log2(num_shards))`` so that a
 # psum of packed words accumulates every bit-lane without cross-lane carries
 # — the per-bit-lane partial-sum trick that keeps the packed dtype on the
-# wire (see aggregation.packed_psum_aggregate).
+# wire (see the "packed" reducer in aggregation.aggregate).
 # ---------------------------------------------------------------------------
 
 
@@ -123,6 +125,17 @@ def packed_lane_bits(bits: int, num_shards: int = 1) -> int:
     """Bit-lane width so a sum over ``num_shards`` biased codes cannot carry."""
     guard = math.ceil(math.log2(num_shards)) if num_shards > 1 else 0
     return bits + guard
+
+
+def lane_bias(lane: int) -> int:
+    """Mid-lane bias 2^(lane-1) — the lane-symmetric alternative to the
+    default ``sum_of``·G bias.  A partial sum of m codes at the carry-free
+    lane ``packed_lane_bits(bits, m)`` always fits around this bias
+    (m·G <= 2^(lane-1)), so every hop of an equal-lane group can share ONE
+    static bias regardless of how many codes its payload has accumulated —
+    what lets the rsag collective run a lane group as a single ``lax.scan``.
+    """
+    return 1 << (int(lane) - 1)
 
 
 def codes_per_word(bits: int, *, lane_bits: int = 0) -> int:
@@ -139,12 +152,15 @@ def packed_words(n: int, bits: int, *, lane_bits: int = 0) -> int:
 
 
 def pack_codes(codes: jax.Array, bits: int, *, lane_bits: int = 0,
-               sum_of: int = 1) -> jax.Array:
+               sum_of: int = 1, bias: int | None = None) -> jax.Array:
     """Pack int32 codes in [-G, G-1] into a flat uint32 word vector.
 
     ``sum_of`` packs PARTIAL SUMS of that many codes (values in
     [-m·G, m·(G-1)], biased by m·G) — the ring collective's inter-level
     repack; the lane must be at least ``packed_lane_bits(bits, sum_of)``.
+    ``bias`` overrides the default ``sum_of``·G bias with an explicit value
+    (the rsag collective biases every lane-L payload by ``lane_bias(L)``
+    so a whole equal-lane hop group shares one static bias).
 
     Padding lanes (beyond ``codes.size``) hold 0 — NOT the biased zero code —
     so unpack can distinguish them and packed buffers compare bit-exactly
@@ -152,32 +168,36 @@ def pack_codes(codes: jax.Array, bits: int, *, lane_bits: int = 0,
     """
     lane = lane_bits or bits
     cpw = codes_per_word(bits, lane_bits=lane)
-    g = int(2 ** (bits - 1)) * int(sum_of)
+    b = int(2 ** (bits - 1)) * int(sum_of) if bias is None else int(bias)
     n = codes.size
     W = packed_words(n, bits, lane_bits=lane)
-    biased = (codes.reshape(-1).astype(jnp.int32) + g).astype(jnp.uint32)
+    # modular uint32 add: exact for every lane width up to the full 32 bits
+    # (an int32 add would overflow for biases >= 2^31)
+    biased = codes.reshape(-1).astype(jnp.uint32) + jnp.uint32(b)
     biased = jnp.pad(biased, (0, cpw * W - n)).reshape(cpw, W)
     shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane)[:, None]
     return jnp.sum(biased << shifts, axis=0, dtype=jnp.uint32)
 
 
 def unpack_codes(packed: jax.Array, bits: int, size: int, *,
-                 lane_bits: int = 0, sum_of: int = 1) -> jax.Array:
+                 lane_bits: int = 0, sum_of: int = 1,
+                 bias: int | None = None) -> jax.Array:
     """Inverse of :func:`pack_codes`: uint32 words -> int32 codes (flat).
 
     ``sum_of`` = number of packed buffers summed into ``packed`` (each summand
     contributes one +G bias per lane); 1 for a plain round-trip, the shard
-    count when unpacking an aggregated psum of packed words.
+    count when unpacking an aggregated psum of packed words.  ``bias``
+    overrides the ``sum_of``·G un-bias (must match the packing side).
     """
     lane = lane_bits or bits
     cpw = codes_per_word(bits, lane_bits=lane)
-    g = int(2 ** (bits - 1))
+    b = int(2 ** (bits - 1)) * int(sum_of) if bias is None else int(bias)
     W = packed.size
     shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane)[:, None]
     mask = jnp.uint32(2 ** lane - 1)
     lanes = (packed.reshape(1, W) >> shifts) & mask            # (cpw, W)
     flat = lanes.reshape(-1)[: int(size)]
-    return flat.astype(jnp.int32) - g * int(sum_of)
+    return (flat - jnp.uint32(b)).astype(jnp.int32)
 
 
 def pack_tree_codes(codes: PyTree, cfg: QuantConfig, *,
@@ -221,6 +241,35 @@ def ring_payload_bits(num_params: int, bits: int,
             continue
         lane = packed_lane_bits(bits, m)
         total += (k - 1) * 32 * packed_words(num_params, bits, lane_bits=lane)
+        m *= k
+    return total
+
+
+def rsag_payload_bits(num_params: int, bits: int,
+                      axis_sizes: Sequence[int]) -> int:
+    """Per-device wire bits of the reduce-scatter + all-gather collective.
+
+    Level ``l`` (cohort axis size K_l, entering partial-sum multiplicity
+    m_l = product of preceding axis sizes) chunks the flat code vector into
+    K_l pieces of C = ceil(d / K_l) codes.  The reduce-scatter phase ships
+    one chunk per hop h = 1..K_l-1 at the GROWING lane
+    ``packed_lane_bits(bits, m_l·h)`` (hop h carries partial sums of m_l·h
+    codes); the all-gather phase ships K_l-1 finished chunks at the final
+    lane ``packed_lane_bits(bits, m_l·K_l)``.  Total ~ 2·d·(n + ⌈log2 K⌉)
+    regardless of K — the large-K cap the per-hop ring (d·n·(K-1)) lacks.
+    """
+    total = 0
+    m = 1
+    for k in axis_sizes:
+        k = int(k)
+        if k <= 1:
+            continue
+        C = -(-int(num_params) // k)
+        for h in range(1, k):
+            lane = packed_lane_bits(bits, m * h)
+            total += 32 * packed_words(C, bits, lane_bits=lane)
+        lane_k = packed_lane_bits(bits, m * k)
+        total += (k - 1) * 32 * packed_words(C, bits, lane_bits=lane_k)
         m *= k
     return total
 

@@ -52,11 +52,21 @@ def quantize_pack(x: jax.Array, key: jax.Array, bits: int, *,
 
 
 def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
-           lane_bits: int = 0, sum_of: int = 1) -> jax.Array:
+           lane_bits: int = 0, sum_of: int = 1,
+           bias: int | None = None) -> jax.Array:
     """Fused ring-hop accumulate: unpack wire words, add into the int32
-    register tree (one VMEM pass)."""
+    register tree (one VMEM pass).  ``bias`` overrides the sum_of·G un-bias
+    (the rsag collective's lane-symmetric bias)."""
     return _pack.repack(packed, acc, bits, size, lane_bits=lane_bits,
-                        sum_of=sum_of, interpret=_INTERPRET)
+                        sum_of=sum_of, bias=bias, interpret=_INTERPRET)
+
+
+def pack_sums(codes: jax.Array, bits: int, *, lane_bits: int = 0,
+              sum_of: int = 1, bias: int | None = None) -> jax.Array:
+    """Scatter-phase pack through the kernel: int32 partial-sum codes ->
+    uint32 wire words at the hop's lane width (the rsag payload builder)."""
+    return _pack.pack_sums(codes, bits, lane_bits=lane_bits, sum_of=sum_of,
+                           bias=bias, interpret=_INTERPRET)
 
 
 def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,

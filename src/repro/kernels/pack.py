@@ -15,6 +15,11 @@ whole hot transform in one VMEM pass:
                                    the forwarded buffer is the incoming words
                                    unchanged, and level transitions re-pack
                                    the register tree at the next sum width)
+  pack_sums:         i32       ->  bias partial-sum codes, shift-OR into
+                                   uint32 words (the rsag collective's
+                                   scatter-phase payload builder: the running
+                                   chunk re-packs at each hop group's grown
+                                   lane width before it re-enters the ring)
 
 Blocks are (cpw, BLOCK_ROWS, 128) for the planar operands against
 (BLOCK_ROWS, 128) word blocks — the planes of one word block ride in the
@@ -159,21 +164,25 @@ def _repack_kernel(words_ref, acc_ref, out_ref, *, lane: int, cpw: int,
     plane = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
     w = (pl.program_id(0) * shape[1] + row) * shape[2] + col
     valid = (w < W) & (plane * W + w < n)
-    delta = jnp.where(valid, lanes.astype(jnp.int32) - bias, 0)
+    # modular uint32 un-bias (exact for biases up to the full lane width)
+    vals = (lanes - jnp.uint32(bias)).astype(jnp.int32)
+    delta = jnp.where(valid, vals, 0)
     out_ref[...] = acc_ref[...] + delta
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "size", "lane_bits",
-                                             "sum_of", "interpret"))
+                                             "sum_of", "bias", "interpret"))
 def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
-           lane_bits: int = 0, sum_of: int = 1,
+           lane_bits: int = 0, sum_of: int = 1, bias: int | None = None,
            interpret: bool = True) -> jax.Array:
     """Fused mid-hop accumulate of the ring collective: unpack ``packed``
     (partial sums of ``sum_of`` codes, biased by sum_of·G per lane at the
     hop's ``lane_bits`` width) and add it into the flat int32 register tree
-    ``acc`` — one VMEM pass instead of unpack-materialize-add.
+    ``acc`` — one VMEM pass instead of unpack-materialize-add.  ``bias``
+    overrides the sum_of·G un-bias (the rsag collective's lane-symmetric
+    ``lane_bias`` scheme).
 
-    Bit-exact with ``acc + unpack_codes(packed, ·, sum_of=·)``.
+    Bit-exact with ``acc + unpack_codes(packed, ·, sum_of=·, bias=·)``.
     """
     lane = lane_bits or bits
     if lane > 32:
@@ -194,7 +203,8 @@ def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
     g = int(2 ** (bits - 1))
     planes = pl.pallas_call(
         functools.partial(_repack_kernel, lane=lane, cpw=cpw,
-                          bias=g * int(sum_of), n=n, W=W),
+                          bias=g * int(sum_of) if bias is None else int(bias),
+                          n=n, W=W),
         grid=(R // BLOCK_ROWS,),
         in_specs=[
             pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
@@ -205,3 +215,62 @@ def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
         interpret=interpret,
     )(words, acc_planes)
     return planes.reshape(cpw, W_pad)[:, :W].reshape(-1)[:n]
+
+
+def _pack_sums_kernel(codes_ref, words_ref, *, bias: int, lane: int, cpw: int,
+                      n: int, W: int):
+    codes = codes_ref[...]                                 # (cpw, BR, LANES)
+    shape = codes.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    plane = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    w = (pl.program_id(0) * shape[1] + row) * shape[2] + col   # word index
+    valid = (w < W) & (plane * W + w < n)                  # real elements only
+    biased = jnp.where(valid, codes.astype(jnp.uint32) + jnp.uint32(bias),
+                       jnp.uint32(0))
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane).reshape(cpw, 1, 1)
+    words_ref[...] = jnp.sum(biased << shifts, axis=0, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "lane_bits", "sum_of",
+                                             "bias", "interpret"))
+def pack_sums(codes: jax.Array, bits: int, *, lane_bits: int = 0,
+              sum_of: int = 1, bias: int | None = None,
+              interpret: bool = True) -> jax.Array:
+    """Scatter-phase pack: int32 PARTIAL-SUM codes -> uint32 wire words.
+
+    The rsag collective's outgoing payload builder: the running chunk
+    (partial sums of ``sum_of`` codes) is biased and bit-packed planar at
+    the hop's ``lane_bits`` width in one VMEM pass — the pack half of
+    ``quantize_pack`` without the quantizer (the codes were quantized once,
+    before the first hop).  ``bias`` overrides the sum_of·G default (rsag
+    uses the lane-symmetric ``quantization.lane_bias``).
+
+    Bit-exact with ``pack_codes(codes, bits, lane_bits=·, sum_of=·, bias=·)``
+    for every size (padding lanes masked to raw 0, matching the pure path).
+    """
+    n = codes.size
+    lane = lane_bits or bits
+    if lane > 32:
+        raise ValueError(f"lane width {lane} exceeds the 32-bit container")
+    cpw = 32 // lane
+    W = -(-n // cpw)
+    per_block = BLOCK_ROWS * LANES
+    W_pad = -(-W // per_block) * per_block
+    R = W_pad // LANES
+    flat = jnp.pad(codes.reshape(-1).astype(jnp.int32), (0, cpw * W - n))
+    planes = jnp.pad(flat.reshape(cpw, W),
+                     ((0, 0), (0, W_pad - W))).reshape(cpw, R, LANES)
+
+    g = int(2 ** (bits - 1))
+    words = pl.pallas_call(
+        functools.partial(_pack_sums_kernel,
+                          bias=g * int(sum_of) if bias is None else int(bias),
+                          lane=lane, cpw=cpw, n=n, W=W),
+        grid=(R // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((cpw, BLOCK_ROWS, LANES), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, LANES), jnp.uint32),
+        interpret=interpret,
+    )(planes)
+    return words.reshape(-1)[:W]

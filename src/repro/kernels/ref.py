@@ -38,13 +38,24 @@ def unpack_dequantize_ref(packed: jnp.ndarray, bits: int, size: int, *,
 
 
 def repack_ref(packed: jnp.ndarray, acc: jnp.ndarray, bits: int, size: int, *,
-               lane_bits: int = 0, sum_of: int = 1) -> jnp.ndarray:
+               lane_bits: int = 0, sum_of: int = 1,
+               bias: int | None = None) -> jnp.ndarray:
     """Oracle for the fused mid-hop repack kernel: unpack the incoming ring
     buffer (partial sums of ``sum_of`` codes at ``lane_bits``) and add it
     into the flat int32 register tree ``acc``."""
     from repro.core.quantization import unpack_codes
     return acc.reshape(-1).astype(jnp.int32) + unpack_codes(
-        packed, bits, size, lane_bits=lane_bits, sum_of=sum_of)
+        packed, bits, size, lane_bits=lane_bits, sum_of=sum_of, bias=bias)
+
+
+def pack_sums_ref(codes: jnp.ndarray, bits: int, *, lane_bits: int = 0,
+                  sum_of: int = 1, bias: int | None = None) -> jnp.ndarray:
+    """Oracle for the scatter-phase pack kernel: bias partial-sum codes and
+    bit-pack them planar at the hop's lane width (the rsag collective's
+    outgoing payload; the inverse of ``repack_ref`` with a zero acc)."""
+    from repro.core.quantization import pack_codes
+    return pack_codes(codes, bits, lane_bits=lane_bits, sum_of=sum_of,
+                      bias=bias)
 
 
 def qmatmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray, sx: float, sw: float) -> jnp.ndarray:

@@ -140,15 +140,15 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool, *,
         from repro.core import aggregation as agg_mod
         cohort_axes = fl_mod.fl_data_axes(mesh, cfg)
         sizes = tuple(int(mesh.shape[a]) for a in cohort_axes)
-        shards = 1
-        for s in sizes:
-            shards *= s
+        plan = agg_mod.make_wire_plan(collective, cfg.quant, cohort_axes,
+                                      sizes)
         wire = {  # the format/bits that actually hit the wire (post-fallback)
             "requested": collective,
-            "effective": agg_mod.effective_wire_format(collective, cfg.quant,
-                                                       shards),
-            "bits_per_param": agg_mod.wire_bits_per_param(collective,
-                                                          cfg.quant, sizes),
+            "resolved": plan.resolved,       # what "auto" picked
+            "effective": plan.effective,
+            "bits_per_param": plan.wire_bits,
+            "phase_bits_per_param": agg_mod.wire_phase_bits_per_param(
+                collective, cfg.quant, sizes),
         }
 
     record = {
@@ -234,8 +234,10 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--collective", default=None,
-                    choices=["paper", "int", "packed", "ring"],
-                    help="wire format (default: quant.wire_format from config)")
+                    choices=list(fl_mod.COLLECTIVE_CHOICES),
+                    help="wire format; 'auto' picks the byte-minimal mode "
+                         "for the mesh (default: quant.wire_format from "
+                         "config)")
     ap.add_argument("--suffix", default="")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
     ap.add_argument("--skip-existing", action="store_true")

@@ -12,6 +12,8 @@ import argparse
 import os
 import time
 
+from repro.config.base import COLLECTIVE_CHOICES  # jax-free
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -19,8 +21,10 @@ def main():
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (0 = real devices)")
     ap.add_argument("--collective", default=None,
-                    choices=["paper", "int", "packed", "ring"],
-                    help="wire format (default: quant.wire_format from config)")
+                    choices=list(COLLECTIVE_CHOICES),
+                    help="wire format; 'auto' picks the byte-minimal mode "
+                         "for the mesh (default: quant.wire_format from "
+                         "config)")
     ap.add_argument("--steps", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)

@@ -11,9 +11,12 @@ on both API generations:
   set_mesh(mesh)              -> ``jax.set_mesh`` context manager when
                                  available, else the legacy ``with mesh:``
                                  resource-env context
-  shard_map(f, mesh, ...)     -> new-style ``axis_names``/``check_vma``
-                                 translated to the 0.4.37 ``auto``/
-                                 ``check_rep`` parameters
+  shard_map(f, mesh, ...)     -> new-style ``axis_names``/``check_vma``;
+                                 partial-auto honoured on jax >= 0.7
+                                 (``HAS_PARTIAL_AUTO``), degraded to
+                                 fully-Manual (replicated body) below, and
+                                 translated to the legacy ``check_rep``
+                                 signature on 0.4.37
   cost_analysis(compiled)     -> one flat dict (0.4.37 returns a 1-element
                                  list of dicts)
 """
@@ -27,6 +30,26 @@ import jax
 HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
 HAS_SET_MESH = hasattr(jax, "set_mesh")
 HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def _version_tuple(v: str):
+    parts = []
+    for p in v.split("."):
+        if not p.isdigit():
+            break
+        parts.append(int(p))
+    return tuple(parts)
+
+
+JAX_VERSION = _version_tuple(jax.__version__)
+# Partial-auto shard_map (some mesh axes Manual, the rest Auto/GSPMD) is
+# what keeps the `model` axis tensor-parallel INSIDE the FL round.  The
+# 0.4.x XLA SPMD partitioner hard-crashes on it for non-trivial bodies
+# (hlo_sharding_util manual-subgroup check), so it is gated to jax >= 0.7
+# where the partitioner handles manual subgroups; below the gate every
+# axis goes Manual and the model axis replicates the body's compute
+# (semantics preserved — see ``shard_map`` below).
+HAS_PARTIAL_AUTO = HAS_NEW_SHARD_MAP and JAX_VERSION >= (0, 7)
 
 
 def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
@@ -68,21 +91,28 @@ def shard_map(f: Callable, *, mesh, in_specs, out_specs,
     """New-style shard_map signature on either jax generation.
 
     ``axis_names`` is the set of mesh axes that are Manual inside ``f``; the
-    remaining axes stay Auto (GSPMD).  0.4.37 spells that ``auto=<complement>``
-    and ``check_rep`` instead of ``check_vma``.
+    remaining axes stay Auto (GSPMD).  Partial-auto (a strict subset of the
+    mesh axes Manual) is honoured only behind the ``HAS_PARTIAL_AUTO``
+    jax >= 0.7 gate; on older jax the request degrades to fully-Manual —
+    axes absent from in_specs simply replicate the body's compute, so
+    semantics are preserved and tensor parallelism inside the body degrades
+    to replication.  0.4.37 spells fully-Manual through the legacy
+    ``jax.experimental.shard_map`` with ``check_rep`` instead of
+    ``check_vma``.
     """
     if HAS_NEW_SHARD_MAP:
         kwargs: Dict[str, Any] = {"mesh": mesh, "in_specs": in_specs,
                                   "out_specs": out_specs,
                                   "check_vma": check_vma}
         if axis_names is not None:
-            kwargs["axis_names"] = set(axis_names)
+            partial = set(axis_names) != set(mesh.axis_names)
+            if not partial or HAS_PARTIAL_AUTO:
+                kwargs["axis_names"] = set(axis_names)
+            # else: drop axis_names -> every axis Manual (the pre-0.7 XLA
+            # SPMD partitioner hard-crashes on manual subgroups)
         return jax.shard_map(f, **kwargs)
-    # 0.4.37: partial-auto shard_map (auto=...) hard-crashes the XLA SPMD
-    # partitioner on non-trivial bodies (hlo_sharding_util manual-subgroup
-    # check), so every axis goes Manual.  Axes absent from in_specs simply
-    # replicate the body's compute — semantics are preserved, tensor
-    # parallelism inside the body degrades to replication on this jax floor.
+    # 0.4.37: no new-style API at all; the legacy shard_map with every axis
+    # Manual (partial-auto via auto=... crashes XLA — see HAS_PARTIAL_AUTO)
     from jax.experimental.shard_map import shard_map as _shard_map
     return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=check_vma)

@@ -274,23 +274,29 @@ def analytic_costs(config: Config, shape: InputShape, mesh, *,
     if is_train:
         if step_kind.endswith("fl_round") and axes:
             # single source of truth for the per-mode wire width, including
-            # the degenerate fallbacks (unquantized uplink -> f32 psum,
-            # lane>32 -> int container) that the runtime collectives apply
+            # "auto" resolution and the degenerate fallbacks (unquantized
+            # uplink -> f32 psum, lane>32 -> int container) that the
+            # runtime collectives apply; rsag's phases are itemized so the
+            # scatter (growing lanes) and gather (final lane) legs stay
+            # separately visible in the roofline breakdown
             axis_sizes = tuple(ms[a] for a in axes)
             shards = 1
             for s in axis_sizes:
                 shards *= s
             eff = agg_wire.effective_wire_format(collective_mode,
-                                                 config.quant, shards)
-            wire_b = agg_wire.wire_bits_per_param(collective_mode,
-                                                  config.quant,
-                                                  axis_sizes) / 8.0
+                                                 config.quant, shards,
+                                                 axis_sizes=axis_sizes)
+            phases = agg_wire.wire_phase_bits_per_param(collective_mode,
+                                                        config.quant,
+                                                        axis_sizes)
             # psum modes: an all-reduce moves each param ~twice (reduce +
-            # broadcast); the ring already charges every hop explicitly.
-            allreduce_factor = 1.0 if eff == "ring" else 2.0
-            delta_global = m.param_count() * wire_b
-            coll["fl_allreduce"] = (allreduce_factor * delta_global
-                                    / (model_par * fsdp_par))
+            # broadcast); the ring/rsag phases already charge every hop
+            # explicitly.
+            allreduce_factor = 1.0 if eff in ("ring", "rsag") else 2.0
+            for phase, bits in phases.items():
+                key = "fl_allreduce" if phase == "psum" else f"fl_{phase}"
+                coll[key] = (allreduce_factor * m.param_count() * bits / 8.0
+                             / (model_par * fsdp_par))
         else:
             # grads carry the param dtype (bf16) under GSPMD
             coll["grad_allreduce"] = 2.0 * params_global / (model_par * fsdp_par)

@@ -73,17 +73,19 @@ def test_effective_wire_format_fallbacks():
     """Degenerate configs must surface the format actually sent: unquantized
     uplinks are f32 psums; lane>32 packings are int psums."""
     q8 = QuantConfig(bits=8)
-    for mode in ("paper", "int", "packed", "ring"):
+    for mode in ("paper", "int", "packed", "ring", "rsag"):
         assert agg.effective_wire_format(mode, q8, 8) == \
             ("paper" if mode == "paper" else mode)
     q_off = QuantConfig(bits=0)
     q_nouplink = QuantConfig(bits=8, quantize_uplink=False)
     for q in (q_off, q_nouplink):
-        for mode in ("int", "packed", "ring"):
+        for mode in ("int", "packed", "ring", "rsag", "auto"):
             assert agg.effective_wire_format(mode, q, 8) == "paper"
     q30 = QuantConfig(bits=30)
     assert agg.effective_wire_format("packed", q30, 8) == "int"  # lane 33
     assert agg.effective_wire_format("ring", q30, 8) == "int"
+    assert agg.effective_wire_format("rsag", q30, 8) == "int"
+    assert agg.effective_wire_format("auto", q30, 8) == "int"
     assert agg.effective_wire_format("int", q30, 8) == "int"
     assert agg.effective_wire_format("packed", q30, 2) == "packed"  # lane 31
     with pytest.raises(ValueError):
@@ -106,8 +108,83 @@ def test_wire_bits_per_param_matches_wire():
     q30 = QuantConfig(bits=30)
     assert agg.wire_bits_per_param("packed", q30, (8,)) == 32.0
     assert agg.wire_bits_per_param("ring", q30, (8,)) == 32.0
+    assert agg.wire_bits_per_param("rsag", q30, (8,)) == 32.0
     # unquantized uplink -> the f32 psum
     assert agg.wire_bits_per_param("ring", QuantConfig(bits=0), (4,)) == 32.0
+
+
+def test_rsag_wire_bits_growing_lanes():
+    """rsag charges one 1/K chunk per hop: scatter hops at the growing
+    n+ceil(log2 h) lane, gather hops at the final lane — capped near
+    2·(n+⌈log2 K⌉) regardless of K (the ring's cost grows with K-1)."""
+    q8 = QuantConfig(bits=8)
+    # K=2: one scatter hop at lane 8 (cpw 4) + one gather hop at lane 9
+    # (cpw 3), each carrying half the vector
+    want_k2 = 0.5 * (32.0 / 4) + 0.5 * (32.0 / 3)
+    assert abs(agg.wire_bits_per_param("rsag", q8, (2,)) - want_k2) < 1e-9
+    # K=16: 28.5 bits/param — between packed (16) and ring (120)
+    got = agg.wire_bits_per_param("rsag", q8, (16,))
+    assert abs(got - 28.5) < 1e-9
+    assert (agg.wire_bits_per_param("packed", q8, (16,)) < got
+            < agg.wire_bits_per_param("ring", q8, (16,)))
+    # the cap: doubling K barely moves the cost (vs the ring's ~2x)
+    k32 = agg.wire_bits_per_param("rsag", q8, (32,))
+    assert k32 < got * 1.2
+    assert agg.wire_bits_per_param("ring", q8, (32,)) > 2 * 100
+    # phases sum to the total and split scatter/gather
+    phases = agg.wire_phase_bits_per_param("rsag", q8, (16,))
+    assert set(phases) == {"reduce_scatter", "all_gather"}
+    assert abs(sum(phases.values()) - got) < 1e-9
+    assert phases["all_gather"] == 15 * (32.0 / 2) / 16  # 15 hops at lane 12
+    # one-shot modes report a single psum phase
+    assert agg.wire_phase_bits_per_param("packed", q8, (2,)) == \
+        {"psum": 32.0 / 3}
+    assert set(agg.wire_phase_bits_per_param("ring", q8, (2,))) == \
+        {"ring_hops"}
+
+
+def test_resolve_auto_picks_byte_minimal_mode():
+    """"auto" = argmin wire_bits_per_param over the quantized modes: ring
+    for small cohorts, packed once the per-hop ring cost blows up, int
+    after the lane>32 fallback, paper when the uplink is unquantized."""
+    q8 = QuantConfig(bits=8)
+    assert agg.resolve_auto(q8, (2,)) == "ring"
+    # two-level (2,4) cohort: the level-1 ring hops at the widened lane
+    # already cost 40 bits/param — the one-shot packed psum (16) wins
+    assert agg.resolve_auto(q8, (2, 4)) == "packed"
+    assert agg.resolve_auto(q8, (16,)) == "packed"
+    assert agg.resolve_auto(QuantConfig(bits=30), (8,)) == "int"
+    assert agg.resolve_auto(QuantConfig(bits=0), (16,)) == "paper"
+    assert agg.resolve_auto(QuantConfig(bits=8, quantize_uplink=False),
+                            (2,)) == "paper"
+    # the resolution is never worse than any concrete quantized mode
+    for bits in (1, 2, 4, 8, 16):
+        for sizes in ((2,), (3,), (16,), (2, 4), (4, 16)):
+            q = QuantConfig(bits=bits)
+            best = agg.resolve_auto(q, sizes)
+            got = agg.wire_bits_per_param(best, q, sizes)
+            for mode in agg.AUTO_ORDER:
+                assert got <= agg.wire_bits_per_param(mode, q, sizes) + 1e-9
+
+
+def test_make_wire_plan_resolves_and_prices():
+    """The plan carries the resolved mode, the post-fallback effective
+    format, and the wire bits telemetry/energy must charge."""
+    q8 = QuantConfig(bits=8)
+    plan = agg.make_wire_plan("auto", q8, ("data",), (2,))
+    assert (plan.mode, plan.resolved, plan.effective) == \
+        ("auto", "ring", "ring")
+    assert plan.wire_bits == 8.0
+    assert plan.num_shards == 2
+    plan16 = agg.make_wire_plan("auto", q8, ("data",), (16,))
+    assert (plan16.resolved, plan16.effective) == ("packed", "packed")
+    q30 = QuantConfig(bits=30)
+    fb = agg.make_wire_plan("rsag", q30, ("data",), (8,))
+    assert (fb.resolved, fb.effective, fb.wire_bits) == ("rsag", "int", 32.0)
+    off = agg.make_wire_plan("packed", QuantConfig(bits=0), ("data",), (4,))
+    assert (off.effective, off.wire_bits) == ("paper", 32.0)
+    with pytest.raises(ValueError):
+        agg.make_wire_plan("bogus", q8, ("data",), (2,))
 
 
 def test_aggregate_kernel_matches_pure():

@@ -81,6 +81,38 @@ def test_expected_total_energy_eq14():
                                rtol=1e-5)
 
 
+def test_uplink_phase_energy_splits_and_sums():
+    """Per-phase uplink energy (rsag's reduce_scatter/all_gather split):
+    each phase charged at its true fractional bits, the phases summing to
+    the single-payload uplink_energy_j of the total wire width."""
+    from repro.config import QuantConfig
+    from repro.core import aggregation as agg
+    ch_cfg = ChannelConfig()
+    rate = jnp.asarray([1.5, 20.0])
+    d = 421_642
+    phases = agg.wire_phase_bits_per_param("rsag", QuantConfig(bits=8), (16,))
+    per = en.uplink_phase_energy_j(ch_cfg, d, phases, rate)
+    assert set(per) == {"reduce_scatter", "all_gather"}
+    total = en.uplink_energy_j(ch_cfg, d, 8, rate,
+                               wire_bits_per_param=sum(phases.values()))
+    np.testing.assert_allclose(np.asarray(sum(per.values())),
+                               np.asarray(total), rtol=1e-6)
+    # each phase alone: payload bits x power / (B x rate), no 1-bit floor
+    want_rs = (d * phases["reduce_scatter"] / (ch_cfg.bandwidth_hz * rate)
+               * ch_cfg.tx_power_w)
+    np.testing.assert_allclose(np.asarray(per["reduce_scatter"]),
+                               np.asarray(want_rs), rtol=1e-6)
+    # a psum mode degenerates to one phase == the plain uplink energy
+    one = en.uplink_phase_energy_j(
+        ch_cfg, d, agg.wire_phase_bits_per_param("packed", QuantConfig(bits=8),
+                                                 (2,)), rate)
+    np.testing.assert_allclose(
+        np.asarray(one["psum"]),
+        np.asarray(en.uplink_energy_j(ch_cfg, d, 8, rate,
+                                      wire_bits_per_param=32.0 / 3)),
+        rtol=1e-6)
+
+
 def test_round_time_includes_compute_and_uplink():
     e_cfg, ch_cfg = EnergyConfig(), ChannelConfig()
     rates = jnp.full((100,), 20.0)

@@ -218,7 +218,10 @@ def test_ring_collective_bit_identical_and_075x_bytes():
             txt = f.lower(params, batch, jax.random.PRNGKey(2)).compile().as_text()
             cb[mode] = collective_bytes(txt)["total"]
     assert cb["ring"] < cb["packed"] < cb["int"] < cb["paper"], cb
-    assert cb["ring"] <= 0.75 * cb["packed"], cb
+    # 0.75x up to one u32 word (4 B) of padding rounding: the concatenated
+    # packed wire is ceil(n/3) words vs the ring's ceil(n/4), so the exact
+    # ratio straddles 3/4 by a word either way
+    assert cb["ring"] <= 0.75 * cb["packed"] + 4, cb
     assert "collective-permute" in jax.jit(
         make_fl_round(model, cfg, mesh, collective="ring")
     ).lower(params, batch, jax.random.PRNGKey(2)).compile().as_text()
@@ -323,10 +326,11 @@ def test_ring_non_pow2_shards_and_all_dropped():
 
 
 def test_lane_overflow_fallback_surfaces_effective_format():
-    """bits=30 on an 8-shard cohort makes the packed/ring lane 33 bits —
-    both modes must fall back to the int container AND report the int
-    container's wire bits in the round telemetry (the silent-fallback fix:
-    energy accounting charges the bytes actually sent)."""
+    """bits=30 on an 8-shard cohort makes the packed/ring/rsag lane 33 bits
+    — all three modes (and "auto") must fall back to the int container AND
+    report the int container's wire bits in the round telemetry (the
+    silent-fallback fix: energy accounting charges the bytes actually
+    sent)."""
     run_py("""
     import dataclasses, jax, jax.numpy as jnp, numpy as np
     from repro.configs import get_config, reduced
@@ -341,22 +345,27 @@ def test_lane_overflow_fallback_surfaces_effective_format():
     cfg = dataclasses.replace(cfg, quant=dataclasses.replace(cfg.quant, bits=30))
     assert agg.effective_wire_format("packed", cfg.quant, 8) == "int"
     assert agg.effective_wire_format("ring", cfg.quant, 8) == "int"
+    assert agg.effective_wire_format("rsag", cfg.quant, 8) == "int"
     assert agg.wire_bits_per_param("ring", cfg.quant, (8,)) == 32.0
+    assert agg.wire_bits_per_param("rsag", cfg.quant, (8,)) == 32.0
+    assert agg.resolve_auto(cfg.quant, (8,)) == "int"
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = token_batch(jax.random.PRNGKey(1), 48, 32, cfg.model.vocab_size)
     outs, txts, wire = {}, {}, {}
     with set_mesh(mesh):
-        for mode in ("int", "packed", "ring"):
+        for mode in ("int", "packed", "ring", "rsag", "auto"):
             f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
             outs[mode], m = f(params, batch, jax.random.PRNGKey(2))
             wire[mode] = float(m["wire_bits_per_param"])
             txts[mode] = f.lower(params, batch,
                                  jax.random.PRNGKey(2)).compile().as_text()
     # telemetry reports the int container (32b), not the requested format
-    assert wire == {"int": 32.0, "packed": 32.0, "ring": 32.0}, wire
-    assert "collective-permute" not in txts["ring"]  # no ring was built
-    for mode in ("packed", "ring"):
+    assert wire == {"int": 32.0, "packed": 32.0, "ring": 32.0,
+                    "rsag": 32.0, "auto": 32.0}, wire
+    for mode in ("ring", "rsag"):
+        assert "collective-permute" not in txts[mode]  # no ring was built
+    for mode in ("packed", "ring", "rsag", "auto"):
         d = jax.tree_util.tree_map(
             lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
             outs["int"], outs[mode])
@@ -365,11 +374,188 @@ def test_lane_overflow_fallback_surfaces_effective_format():
     """)
 
 
-def test_pallas_kernels_routed_into_packed_and_ring():
-    """With use_pallas=True the packed/ring collectives must execute the
-    fused quantize_pack / unpack_dequantize / repack kernels (call-counted
-    at trace time) and match the pure-jnp paths bit-exactly (interpret
-    mode on CPU)."""
+def test_rsag_bit_identical_and_wire_accounting():
+    """The rsag acceptance bar on the debug mesh: bit-identical to
+    "int"/"packed"/"ring", collective-permute on the wire, and honest
+    telemetry (9.33 bits/param at n=8, K=2: half the vector at the native
+    lane + half at the grown all-gather lane)."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.hlo import collective_bytes
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((2,4), ("data","model"))
+    cfg = reduced(get_config("olmo-1b"))
+    assert cfg.quant.bits == 8
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
+    outs, cb, wire = {}, {}, {}
+    with set_mesh(mesh):
+        for mode in ("paper", "int", "packed", "ring", "rsag"):
+            f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
+            outs[mode], m = f(params, batch, jax.random.PRNGKey(2))
+            assert np.isfinite(float(m["loss"]))
+            wire[mode] = float(m["wire_bits_per_param"])
+            txt = f.lower(params, batch, jax.random.PRNGKey(2)).compile().as_text()
+            cb[mode] = collective_bytes(txt)["total"]
+            if mode == "rsag":
+                assert "collective-permute" in txt
+    # K=2 regime: ring still wins, but rsag already undercuts packed/int
+    assert cb["ring"] < cb["rsag"] < cb["packed"] < cb["int"] < cb["paper"], cb
+    assert abs(wire["rsag"] - (0.5 * 8.0 + 0.5 * 32.0 / 3)) < 1e-4, wire
+    for other in ("int", "packed", "ring"):
+        d = jax.tree_util.tree_map(
+            lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+            outs[other], outs["rsag"])
+        assert max(jax.tree_util.tree_leaves(d)) == 0.0, f"rsag must equal {other}"
+    print("collective bytes ring=%d rsag=%d packed=%d" %
+          (cb["ring"], cb["rsag"], cb["packed"]))
+    """)
+
+
+def test_rsag_bit_exact_across_bits_non_pow2_and_all_dropped():
+    """rsag == int bit-for-bit for bits in {1,2,4,8} on a 3-shard cohort
+    (non-power-of-two K -> uneven reduce-scatter chunks) with packet drops,
+    and an all-dropped round (q=1) is a no-op."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((3,2), ("data","model"))
+    base = reduced(get_config("olmo-1b"))
+    base = dataclasses.replace(base, channel=dataclasses.replace(
+        base.channel, error_prob=0.3))
+    model = build_model(base)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, base.model.vocab_size)
+    with set_mesh(mesh):
+        for bits in (1, 2, 4, 8):
+            cfg = dataclasses.replace(base, quant=dataclasses.replace(
+                base.quant, bits=bits))
+            f_rsag = jax.jit(make_fl_round(model, cfg, mesh, collective="rsag"))
+            f_int = jax.jit(make_fl_round(model, cfg, mesh, collective="int"))
+            for seed in (2, 3):
+                p_r, m_r = f_rsag(params, batch, jax.random.PRNGKey(seed))
+                p_i, m_i = f_int(params, batch, jax.random.PRNGKey(seed))
+                assert float(m_r["survivors"]) == float(m_i["survivors"])
+                d = jax.tree_util.tree_map(
+                    lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+                    p_r, p_i)
+                assert max(jax.tree_util.tree_leaves(d)) == 0.0, (bits, seed)
+        cfg1 = dataclasses.replace(base, channel=dataclasses.replace(
+            base.channel, error_prob=1.0))
+        f1 = jax.jit(make_fl_round(model, cfg1, mesh, collective="rsag"))
+        p1, m1 = f1(params, batch, jax.random.PRNGKey(7))
+        assert float(m1["survivors"]) == 0.0
+        d = jax.tree_util.tree_map(
+            lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+            params, p1)
+        assert max(jax.tree_util.tree_leaves(d)) == 0.0, "all-dropped must be a no-op"
+    print("OK")
+    """, devices=6)
+
+
+def test_multi_axis_cohort_ring_and_rsag_bit_identical():
+    """The production cohort shape: FLConfig.cohort_axes defaults to
+    ('pod','data'), so ring runs NESTED levels (inter-level repack at the
+    sum width) and rsag compounds the partial-sum multiplicity (unit > 1)
+    across levels — both must stay bit-identical to "int" and to their own
+    Pallas routing on a ('pod','data','model') = (2,2,2) mesh."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    base = reduced(get_config("olmo-1b"))
+    model = build_model(base)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 16, 32, base.model.vocab_size)
+    with set_mesh(mesh):
+        f_int = jax.jit(make_fl_round(model, base, mesh, collective="int"))
+        p_int, m_int = f_int(params, batch, jax.random.PRNGKey(2))
+        assert float(m_int["survivors"]) >= 0.0
+        for mode, want_wire in (("ring", 1 * 8.0 + 1 * 32.0 / 3),
+                                ("rsag", None)):
+            outs = {}
+            for pallas in (False, True):
+                cfg = dataclasses.replace(base, quant=dataclasses.replace(
+                    base.quant, use_pallas=pallas))
+                f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
+                outs[pallas], m = f(params, batch, jax.random.PRNGKey(2))
+                if want_wire is not None:
+                    assert abs(float(m["wire_bits_per_param"]) - want_wire) < 1e-4
+            for name, other in (("pallas", outs[True]), ("int", p_int)):
+                d = jax.tree_util.tree_map(
+                    lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+                    outs[False], other)
+                assert max(jax.tree_util.tree_leaves(d)) == 0.0, (mode, name)
+    print("OK")
+    """)
+
+
+def test_auto_collective_resolves_to_byte_minimal_mode():
+    """"auto" on the 2x4 debug mesh (K=2) must lower to the ring — same
+    HLO collective bytes, a collective-permute on the wire, ring wire bits
+    in the telemetry — and its aggregation must equal every concrete mode."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.core import aggregation as agg
+    from repro.core.fl import make_fl_round, resolve_collective
+    from repro.models import build_model
+    from repro.data.synthetic import token_batch
+    from repro.utils.hlo import collective_bytes
+    from repro.utils.compat import make_mesh, set_mesh
+
+    base = reduced(get_config("olmo-1b"))
+    assert agg.resolve_auto(base.quant, (2,)) == "ring"
+    assert agg.resolve_auto(base.quant, (16,)) == "packed"
+    # the wire_format knob reaches "auto" too
+    cfg_wf = dataclasses.replace(base, quant=dataclasses.replace(
+        base.quant, wire_format="auto"))
+    assert resolve_collective(cfg_wf, None) == "auto"
+
+    mesh = make_mesh((2,4), ("data","model"))
+    model = build_model(base)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, base.model.vocab_size)
+    outs, cb, wire = {}, {}, {}
+    with set_mesh(mesh):
+        for mode in ("auto", "ring"):
+            f = jax.jit(make_fl_round(model, base, mesh, collective=mode))
+            outs[mode], m = f(params, batch, jax.random.PRNGKey(2))
+            wire[mode] = float(m["wire_bits_per_param"])
+            txt = f.lower(params, batch, jax.random.PRNGKey(2)).compile().as_text()
+            assert "collective-permute" in txt, mode
+            cb[mode] = collective_bytes(txt)["total"]
+    assert cb["auto"] == cb["ring"], cb
+    assert wire == {"auto": 8.0, "ring": 8.0}, wire
+    d = jax.tree_util.tree_map(
+        lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+        outs["auto"], outs["ring"])
+    assert max(jax.tree_util.tree_leaves(d)) == 0.0
+    print("OK")
+    """)
+
+
+def test_pallas_kernels_routed_into_packed_ring_and_rsag():
+    """With use_pallas=True the packed/ring/rsag collectives must execute
+    the fused quantize_pack / unpack_dequantize / repack / pack_sums
+    kernels (call-counted at trace time) and match the pure-jnp paths
+    bit-exactly (interpret mode on CPU)."""
     run_py("""
     import dataclasses, jax, jax.numpy as jnp, numpy as np
     from repro.configs import get_config, reduced
@@ -380,7 +566,7 @@ def test_pallas_kernels_routed_into_packed_and_ring():
     import repro.kernels.ops as kops
 
     calls = {}
-    for name in ("quantize_pack", "unpack_dequantize", "repack"):
+    for name in ("quantize_pack", "unpack_dequantize", "repack", "pack_sums"):
         def wrap(orig=getattr(kops, name), name=name):
             def f(*a, **kw):
                 calls[name] = calls.get(name, 0) + 1
@@ -395,7 +581,8 @@ def test_pallas_kernels_routed_into_packed_and_ring():
     batch = token_batch(jax.random.PRNGKey(1), 12, 32, base.model.vocab_size)
     with set_mesh(mesh):
         for mode, expected in (("packed", ("quantize_pack", "unpack_dequantize")),
-                               ("ring", ("quantize_pack", "repack"))):
+                               ("ring", ("quantize_pack", "repack")),
+                               ("rsag", ("pack_sums", "repack"))):
             outs = {}
             for pallas in (False, True):
                 calls.clear()

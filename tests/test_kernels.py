@@ -142,6 +142,47 @@ def test_repack_kernel_matches_ref(bits, sum_of, n):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(acc + partial))
 
 
+@pytest.mark.parametrize("bits,m", [(1, 2), (2, 3), (8, 4), (8, 16)])
+@pytest.mark.parametrize("n", [17, 4096, 40_000])
+def test_pack_sums_kernel_matches_ref(bits, m, n):
+    """The rsag scatter-phase pack: partial-sum codes -> wire words at the
+    hop's lane with the lane-symmetric bias, bit-exact against pack_codes
+    for aligned and unaligned sizes (padding lanes raw 0)."""
+    lane = Q.packed_lane_bits(bits, m)
+    b = Q.lane_bias(lane)
+    g = 2 ** (bits - 1)
+    rng = np.random.default_rng(bits * 77 + n + m)
+    partial = jnp.asarray(rng.integers(-g * m, m * (g - 1) + 1,
+                                       size=n).astype(np.int32))
+    got = ops.pack_sums(partial, bits, lane_bits=lane, bias=b)
+    want = ref.pack_sums_ref(partial, bits, lane_bits=lane, bias=b)
+    assert got.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the default sum_of·G bias stays available (ring inter-level form)
+    got_d = ops.pack_sums(partial, bits, lane_bits=lane, sum_of=m)
+    want_d = Q.pack_codes(partial, bits, lane_bits=lane, sum_of=m)
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+@pytest.mark.parametrize("bits,m", [(2, 3), (8, 4), (8, 16)])
+def test_pack_sums_repack_hop_roundtrip(bits, m):
+    """One rsag hop: pack_sums at lane L/bias 2^(L-1) -> repack with the
+    same bias recovers acc + partial exactly (the scatter accumulate)."""
+    n = 10_001
+    lane = Q.packed_lane_bits(bits, m)
+    b = Q.lane_bias(lane)
+    g = 2 ** (bits - 1)
+    rng = np.random.default_rng(bits + m)
+    partial = jnp.asarray(rng.integers(-g * m, m * (g - 1) + 1,
+                                       size=n).astype(np.int32))
+    acc = jnp.asarray(rng.integers(-g, g, size=n).astype(np.int32))
+    words = ops.pack_sums(partial, bits, lane_bits=lane, bias=b)
+    got = ops.repack(words, acc, bits, n, lane_bits=lane, bias=b)
+    want = ref.repack_ref(words, acc, bits, n, lane_bits=lane, bias=b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(acc + partial))
+
+
 def test_repack_kernel_zero_acc_is_unpack():
     """repack into a zero register tree == plain unpack (the ring's own-codes
     initialisation when the packed buffer comes from the fused kernel)."""

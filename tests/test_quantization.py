@@ -215,6 +215,49 @@ def test_pack_codes_partial_sum_bias_roundtrip(bits, sum_of):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(partial))
 
 
+@pytest.mark.parametrize("bits,m", [(2, 3), (4, 2), (8, 4), (8, 7), (16, 2)])
+def test_pack_codes_lane_bias_roundtrip(bits, m):
+    """The lane-symmetric bias (rsag's scheme): partial sums of m codes at
+    the carry-free lane round-trip exactly around bias 2^(lane-1), which
+    always dominates m·G — one static bias for a whole equal-lane group."""
+    lane = Q.packed_lane_bits(bits, m)
+    b = Q.lane_bias(lane)
+    g = 2 ** (bits - 1)
+    assert b >= m * g  # the containment that makes the shared bias legal
+    n = 1001
+    partial = jax.random.randint(jax.random.PRNGKey(95 + bits), (n,),
+                                 -g * m, m * (g - 1) + 1, jnp.int32)
+    words = Q.pack_codes(partial, bits, lane_bits=lane, bias=b)
+    out = Q.unpack_codes(words, bits, n, lane_bits=lane, bias=b)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(partial))
+    # bias=None keeps the documented sum_of·G default bit-for-bit
+    np.testing.assert_array_equal(
+        np.asarray(Q.pack_codes(partial, bits, lane_bits=lane, sum_of=m)),
+        np.asarray(Q.pack_codes(partial, bits, lane_bits=lane, sum_of=m,
+                                bias=m * g)))
+
+
+def test_rsag_payload_bits_accounting():
+    """Chunked growing-lane accounting: scatter hops at n+⌈log2 h⌉, gather
+    hops at the final lane, each carrying a ceil(d/K) chunk — total capped
+    near 2·d·(n+⌈log2 K⌉) where the per-hop ring grows with K-1."""
+    d = 1_200_000
+    # K=2 at n=8: one scatter hop (lane 8) + one gather hop (lane 9)
+    C = d // 2
+    want = (32 * Q.packed_words(C, 8, lane_bits=8)
+            + 32 * Q.packed_words(C, 8, lane_bits=9))
+    assert Q.rsag_payload_bits(d, 8, (2,)) == want
+    # the large-K cap: K=16 stays within ~2·d·(n+log2 K); the ring is 15·d·n
+    rsag16 = Q.rsag_payload_bits(d, 8, (16,))
+    assert rsag16 < 2.0 * d * (8 + 4) * 1.25
+    assert rsag16 < Q.ring_payload_bits(d, 8, (16,)) / 4
+    # doubling K barely moves the cost (vs the ring's ~2x)
+    assert Q.rsag_payload_bits(d, 8, (32,)) < rsag16 * 1.2
+    # size-1 axes are free; empty cohort ships nothing
+    assert Q.rsag_payload_bits(d, 8, (1, 2)) == Q.rsag_payload_bits(d, 8, (2,))
+    assert Q.rsag_payload_bits(d, 8, ()) == 0
+
+
 def test_ring_payload_bits_accounting():
     """Per-hop native-width accounting: K=2 at n=8 is exactly d·n (0.75x the
     guard-lane psum words); multi-level rings add sum-width hops; size-1
