@@ -1,0 +1,217 @@
+"""Fleet-scale sweep: per-round wall-clock of the population layer.
+
+For fleet sizes {1e3, 1e5, 1e6} x the four selection policies this runs
+the fleet-mode ``FLSimulator.run_rounds`` — the WHOLE fleet update
+(Gauss-Markov fading, availability, masked-top_k selection, FBL-tied
+drops, battery debit) inside the single jitted round scan — on the
+paper's MNIST QNN and records per-round wall-clock plus the selected
+cohort's realized energy/drop stats into ``BENCH_fleet_scale.json``.
+
+The committed JSON is a regression gate (``benchmarks/run.py --check``):
+
+* the isolated 1e6-device **selection+fading step** (no model training —
+  just advance_channel -> rates -> round_cost -> select_cohort, jitted)
+  is re-timed and must stay under the recorded ``budget_fleet_step_s``
+  (measured x MARGIN at generation time, so CI noise has headroom);
+* the recorded collective wire accounting must not regress: the
+  configured wire format's ``wire_bits_per_param`` is recomputed from
+  ``aggregation.make_wire_plan`` and must not exceed the committed value
+  (the fleet layer must never add wire bytes — it only picks WHO talks).
+
+Runs single-device and in-process (the population layer is pure jnp; the
+1e6 sweep is the "no host round-trips" proof — one scan dispatch per
+policy regardless of fleet size).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+from benchmarks.common import emit
+
+SIZES = (1_000, 100_000, 1_000_000)
+ROUNDS = 3
+BUDGET_MARGIN = 8.0   # budget = measured step time x this (CI noise headroom)
+OUT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_fleet_scale.json")
+
+
+def _config(size: int, policy: str):
+    from repro.configs import get_config
+    cfg = get_config("mnist_cnn")
+    return dataclasses.replace(
+        cfg,
+        fl=dataclasses.replace(cfg.fl, devices_per_round=8, local_iters=2),
+        train=dataclasses.replace(cfg.train, global_batch=16),
+        fleet=dataclasses.replace(cfg.fleet, size=size, selection=policy))
+
+
+def _build_sim(size: int, policy: str):
+    import jax
+    from repro.core.fl import FLSimulator
+    from repro.data.pipeline import make_federated_digits
+    from repro.models import build_model
+    cfg = _config(size, policy)
+    model = build_model(cfg)
+    store = make_federated_digits(jax.random.PRNGKey(0), num_samples=512,
+                                  num_clients=16)
+    sim = FLSimulator(model, cfg, store)
+    params = model.init(jax.random.PRNGKey(1))
+    return sim, params
+
+
+def _time_run_rounds(sim, params, rounds: int = ROUNDS):
+    """Wall-clock of the jitted fleet round scan (warm compile first)."""
+    import jax
+    p, hist = sim.run_rounds(params, rounds, jax.random.PRNGKey(2))
+    jax.block_until_ready(jax.tree_util.tree_leaves(p))
+    t0 = time.perf_counter()
+    p, hist = sim.run_rounds(params, rounds, jax.random.PRNGKey(3))
+    jax.block_until_ready(jax.tree_util.tree_leaves(p))
+    return (time.perf_counter() - t0) / rounds, hist
+
+
+def measure_fleet_step(size: int, policy: str = "rate_aware",
+                       iters: int = 5) -> float:
+    """Wall-clock (s) of ONE jitted selection+fading step at ``size``
+    devices — the pure population-layer cost the --check budget gates."""
+    import jax
+    from repro.population import fleet as pfleet
+    from repro.population import selection as pselect
+    cfg = _config(size, policy)
+    state = pfleet.init_fleet(jax.random.PRNGKey(0), cfg)
+    num_params = 421_642  # the paper QNN; only scales the cost vector
+
+    @jax.jit
+    def step(state, key):
+        state = pfleet.advance_channel(state, key, cfg)
+        rates = pfleet.fleet_rates(state, cfg.channel)
+        cost = pfleet.round_cost_j(cfg, rates, num_params)
+        idx, valid = pselect.select_cohort(
+            policy, state, rates, cfg.fl.devices_per_round, key, cost)
+        return state, idx, valid
+
+    state, idx, _ = step(state, jax.random.PRNGKey(1))   # compile
+    jax.block_until_ready(idx)
+    times = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        state, idx, _ = step(state, jax.random.PRNGKey(2 + i))
+        jax.block_until_ready(idx)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _wire_record(cfg) -> dict:
+    """The configured collective's honest wire accounting (fleet cohort
+    = the simulator's K uplinks; recorded so --check can verify the fleet
+    layer never regresses the wire)."""
+    from repro.core import aggregation as agg
+    from repro.core.fl import resolve_collective
+    mode = resolve_collective(cfg, None)
+    sizes = (cfg.fl.devices_per_round,)
+    plan = agg.make_wire_plan(mode, cfg.quant, ("data",), sizes)
+    return {"mode": mode, "resolved": plan.resolved,
+            "cohort": list(sizes),
+            "wire_bits_per_param": plan.wire_bits,
+            "phase_bits_per_param": agg.wire_phase_bits_per_param(
+                mode, cfg.quant, sizes)}
+
+
+def run() -> None:
+    from repro.config.base import SELECTION_POLICIES
+    record = {"arch": "mnist_cnn", "rounds_timed": ROUNDS, "entries": {}}
+    for size in SIZES:
+        per_policy = {}
+        for policy in SELECTION_POLICIES:
+            sim, params = _build_sim(size, policy)
+            per_round_s, hist = _time_run_rounds(sim, params)
+            stats = {
+                "per_round_s": round(per_round_s, 4),
+                "cohort_energy_j": round(
+                    sum(h["cohort_energy_j"] for h in hist) / len(hist), 4),
+                "survivors_mean": round(
+                    sum(h["survivors"] for h in hist) / len(hist), 2),
+                "drops_mean": round(
+                    sum(h["drops"] for h in hist) / len(hist), 2),
+            }
+            per_policy[policy] = stats
+            emit(f"fleet_{size}_{policy}", per_round_s * 1e6,
+                 f"per_round_s={stats['per_round_s']};"
+                 f"cohort_energy_j={stats['cohort_energy_j']};"
+                 f"survivors={stats['survivors_mean']}")
+        record["entries"][str(size)] = per_policy
+    step_s = measure_fleet_step(SIZES[-1])
+    record["fleet_step_size"] = SIZES[-1]
+    record["fleet_step_s"] = round(step_s, 4)
+    record["budget_fleet_step_s"] = round(step_s * BUDGET_MARGIN, 4)
+    record["wire"] = _wire_record(_config(SIZES[-1], "rate_aware"))
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    emit("fleet_scale_json", step_s * 1e6,
+         f"wrote={os.path.basename(OUT_JSON)};"
+         f"step_1e6_s={record['fleet_step_s']};"
+         f"budget_s={record['budget_fleet_step_s']}")
+
+
+def check() -> int:
+    """Regression gate for ``run.py --check``: re-time the committed-size
+    selection+fading step against the recorded wall-clock budget and
+    verify the recomputed wire bits never exceed the committed ones.
+    Returns the failure count (0 = pass).
+
+    The budget is machine-relative (measured x BUDGET_MARGIN on the
+    machine that last ran the ``fleet`` benchmark) — on much slower
+    hardware, re-baseline with ``python -m benchmarks.run --only fleet``
+    before gating.  Both sub-checks always run; failures are summed, so a
+    budget miss never masks a wire regression (or vice versa)."""
+    if not os.path.exists(OUT_JSON):
+        print("fleet_scale --check: no committed BENCH_fleet_scale.json")
+        return 1
+    with open(OUT_JSON) as f:
+        committed = json.load(f)
+    failures = 0
+    size = int(committed.get("fleet_step_size", SIZES[-1]))
+    budget = committed.get("budget_fleet_step_s")
+    if budget is None:
+        print("  fleet step: no committed budget [REGRESSED]")
+        failures += 1
+    else:
+        got = measure_fleet_step(size)
+        ok = got <= budget
+        failures += not ok
+        print(f"  fleet step ({size} devices): {got:.4f}s vs budget "
+              f"{budget}s [{'ok' if ok else 'OVER BUDGET'}]")
+    wire = committed.get("wire")
+    if not wire:
+        print("  wire: no committed record [REGRESSED]")
+        failures += 1
+    else:
+        from repro.core import aggregation as agg
+        cfg = _config(size, "rate_aware")
+        plan = agg.make_wire_plan(wire["mode"], cfg.quant, ("data",),
+                                  tuple(wire["cohort"]))
+        ok = plan.wire_bits <= wire["wire_bits_per_param"] + 1e-9
+        failures += not ok
+        print(f"  wire bits/param ({wire['mode']}): committed="
+              f"{wire['wire_bits_per_param']} recomputed={plan.wire_bits} "
+              f"[{'ok' if ok else 'REGRESSED'}]")
+    return failures
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="re-time the 1e6 selection+fading step against the "
+                         "committed budget + wire-bit regression gate")
+    args = ap.parse_args()
+    if args.check:
+        n = check()
+        if n:
+            raise SystemExit(f"{n} fleet_scale gate(s) failed")
+    else:
+        run()

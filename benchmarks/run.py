@@ -23,6 +23,8 @@ REGISTRY = {
                 "benchmarks.kernels_micro"),
     "collectives": ("wire formats: paper f32 vs int codes vs bit-packed u32",
                     "benchmarks.collective_modes"),
+    "fleet": ("fleet-scale population sweep: {1e3,1e5,1e6} x 4 policies",
+              "benchmarks.fleet_scale"),
     "roofline": ("roofline table from dry-run artifacts",
                  "benchmarks.roofline_report"),
     "ablations": ("non-IID split + Pallas-kernel-in-the-loop ablations",
@@ -40,16 +42,25 @@ def main() -> None:
                          "BENCH_collective_modes.json, or if 'auto' resolves "
                          "to a mode that is not wire-bit-minimal for its "
                          "entry (bits/param — HLO bytes under-count scanned "
-                         "collectives)")
+                         "collectives); also re-times the 1e6-device fleet "
+                         "selection+fading step against the committed "
+                         "BENCH_fleet_scale.json wall-clock budget and its "
+                         "wire-bit record")
     args = ap.parse_args()
     if args.check:
-        from benchmarks import collective_modes
+        from benchmarks import collective_modes, fleet_scale
         regressed = collective_modes.check()
         if regressed:
             raise SystemExit(
                 f"{regressed} collective mode(s) regressed vs "
                 f"BENCH_collective_modes.json")
         print("# --check: collective wire bytes OK", file=sys.stderr)
+        regressed = fleet_scale.check()
+        if regressed:
+            raise SystemExit(
+                f"{regressed} fleet_scale gate(s) failed vs "
+                f"BENCH_fleet_scale.json")
+        print("# --check: fleet step budget + wire OK", file=sys.stderr)
         return
     selected = [s for s in args.only.split(",") if s] or list(REGISTRY)
 

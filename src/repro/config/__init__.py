@@ -9,6 +9,7 @@ from repro.config.base import (
     EnergyConfig,
     ConvergenceConfig,
     FLConfig,
+    FleetConfig,
     MeshConfig,
     TrainConfig,
     apply_overrides,
@@ -18,5 +19,6 @@ from repro.config.base import (
 __all__ = [
     "Config", "ModelConfig", "MoEConfig", "MLAConfig", "RecurrentConfig",
     "QuantConfig", "ChannelConfig", "EnergyConfig", "ConvergenceConfig",
-    "FLConfig", "MeshConfig", "TrainConfig", "apply_overrides", "config_to_dict",
+    "FLConfig", "FleetConfig", "MeshConfig", "TrainConfig", "apply_overrides",
+    "config_to_dict",
 ]

@@ -248,6 +248,42 @@ class ConvergenceConfig:
     target_eps: float = 0.1
 
 
+#: cohort selection policies of the population layer (``repro.population``).
+#: Lives here — the one jax-free module — so CLI launchers can build their
+#: ``--selection`` choices before jax initializes.
+SELECTION_POLICIES = ("uniform", "rate_aware", "energy_aware", "round_robin")
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Heterogeneous device population (beyond-paper; ``repro.population``).
+
+    ``size`` = 0 disables the fleet layer entirely — the simulator and the
+    distributed round fall back to the paper's homogeneous i.i.d. cohort
+    (fresh Rayleigh draw + fixed-``error_prob`` Bernoulli drops).  With a
+    fleet, every device carries a pathloss class, a Gauss-Markov AR(1)
+    correlated fading state, a battery (J) debited by the §II-D energy
+    model each round it is selected, and a per-round availability draw;
+    cohorts are chosen by a jit-able ``selection`` policy over the full
+    fleet and packet errors realize per-device from the FBL operating
+    point (outage ⇒ certain drop).
+    """
+    size: int = 0                   # fleet device count N_f (0 = disabled)
+    selection: str = "uniform"      # one of SELECTION_POLICIES
+    fading_rho: float = 0.9         # AR(1) coefficient of the complex fading
+    pathloss_classes: Tuple[float, ...] = (1.0, 0.5, 0.25, 0.125)
+    class_probs: Tuple[float, ...] = ()   # () => uniform over classes
+    battery_j: float = 50.0         # mean initial battery energy (J)
+    battery_spread: float = 0.5     # uniform ± fraction around battery_j
+    availability: float = 0.9       # per-round duty-cycle probability
+    error_reweight: bool = False    # opt-in unbiased 1/(1-q) correction
+    seed: int = 0                   # fleet init PRNG (independent of fl.seed)
+
+    @property
+    def enabled(self) -> bool:
+        return self.size > 0
+
+
 @dataclass(frozen=True)
 class FLConfig:
     """Federated orchestration (paper §II-C / §IV)."""
@@ -315,6 +351,7 @@ class Config:
     energy: EnergyConfig = field(default_factory=EnergyConfig)
     convergence: ConvergenceConfig = field(default_factory=ConvergenceConfig)
     fl: FLConfig = field(default_factory=FLConfig)
+    fleet: FleetConfig = field(default_factory=FleetConfig)
     mesh: MeshConfig = field(default_factory=MeshConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
 

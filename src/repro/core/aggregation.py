@@ -467,7 +467,7 @@ def _reduce_ring(plan: WirePlan, xs, keys, n: int) -> jax.Array:
 
 
 def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
-                unit: int, n: int) -> jax.Array:
+                unit: int, n: int, *, final: bool = False) -> jax.Array:
     """One reduce-scatter + all-gather level over cohort axis ``axis``.
 
     ``codes`` holds flat partial sums of ``unit`` codes; returns flat sums
@@ -479,6 +479,13 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
     (not the count-dependent m·G) so all hops of an equal-lane group share
     static pack/unpack constants and run as ONE ``lax.scan`` — the traced
     collective count stays O(log K) instead of O(K).
+
+    ``final`` marks the LAST level: its all-gather chunks are the finished
+    code sums, so the store dequantizes straight out of the wire words
+    into the f32 output (the fused ``unpack_dequantize`` scatter variant
+    when ``use_pallas``) and the int32 round-trip of the plain
+    ``unpack_codes`` store disappears — the return is flat f32, already
+    dequantized.
     """
     qcfg = plan.quant
     bits = qcfg.bits
@@ -532,9 +539,37 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
     # ---- all-gather: redistribute finished chunks at the final lane ------
     lane_k = quant.packed_lane_bits(bits, unit * K)
     bias_k = quant.lane_bias(lane_k)
+    buf = pack_fn(carry, lane_k)
+
+    if final:
+        # fused store: finished chunks dequantize straight from the wire
+        def unpack_store(words):
+            if qcfg.use_pallas:
+                from repro.kernels import ops as kops
+                return kops.unpack_dequantize(words, bits, C,
+                                              clip=qcfg.clip,
+                                              lane_bits=lane_k, bias=bias_k)
+            return quant.dequantize_codes(
+                quant.unpack_codes(words, bits, C, lane_bits=lane_k,
+                                   bias=bias_k), bits, clip=qcfg.clip)
+
+        out = jnp.zeros((K, C), jnp.float32)
+        own = quant.dequantize_codes(carry, bits, clip=qcfg.clip)
+        out = jax.lax.dynamic_update_slice(out, own[None],
+                                           ((idx + 1) % K, 0))
+
+        def gather_f32(state, t):
+            b, o = state
+            b = jax.lax.ppermute(b, axis, perm)
+            o = jax.lax.dynamic_update_slice(o, unpack_store(b)[None],
+                                             ((idx + 1 - t) % K, 0))
+            return (b, o), None
+
+        (_, out), _ = jax.lax.scan(gather_f32, (buf, out), jnp.arange(1, K))
+        return out.reshape(-1)[:n]
+
     out = jnp.zeros((K, C), jnp.int32)
     out = jax.lax.dynamic_update_slice(out, carry[None], ((idx + 1) % K, 0))
-    buf = pack_fn(carry, lane_k)
 
     def gather(state, t):
         b, o = state
@@ -550,16 +585,22 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
 def _reduce_rsag(plan: WirePlan, xs, keys, n: int) -> jax.Array:
     """reduce-scatter + all-gather with growing lane widths (see
     :func:`_rsag_level`); multi-axis cohorts run one level per axis, the
-    partial-sum multiplicity compounding like the ring's nested levels."""
+    partial-sum multiplicity compounding like the ring's nested levels.
+    The LAST level's all-gather stores dequantized f32 directly (fused
+    ``unpack_dequantize`` under ``use_pallas``) — earlier levels must stay
+    int32 codes because later levels keep summing them."""
     codes = _flat_codes(plan, xs, keys)
+    active = [(axis, int(K)) for axis, K in zip(plan.axes, plan.axis_sizes)
+              if K > 1]
+    if not active:
+        return quant.dequantize_codes(codes, plan.quant.bits,
+                                      clip=plan.quant.clip)
     unit = 1
-    for axis, K in zip(plan.axes, plan.axis_sizes):
-        if K <= 1:
-            continue
-        codes = _rsag_level(plan, codes, axis, int(K), unit, n)
-        unit *= int(K)
-    return quant.dequantize_codes(codes, plan.quant.bits,
-                                  clip=plan.quant.clip)
+    for i, (axis, K) in enumerate(active):
+        codes = _rsag_level(plan, codes, axis, K, unit, n,
+                            final=(i == len(active) - 1))
+        unit *= K
+    return codes  # already dequantized f32 by the final level's store
 
 
 _REDUCERS = {"int": _reduce_int, "packed": _reduce_packed,

@@ -53,6 +53,42 @@ def sample_rayleigh_gain2(key: jax.Array, shape=(), scale: float = 1.0) -> jax.A
     return jax.random.exponential(key, shape) * scale
 
 
+def init_rayleigh_state(key: jax.Array, shape,
+                        scale: jax.Array = 1.0) -> tuple:
+    """Stationary complex Rayleigh fading state h ~ CN(0, scale).
+
+    Returns ``(h_re, h_im)`` with each component N(0, scale/2), so
+    ``h_re² + h_im²`` is exponential with mean ``scale`` — the same
+    marginal :func:`sample_rayleigh_gain2` draws, but as an explicit state
+    the Gauss-Markov step below can correlate across rounds.  ``scale``
+    broadcasts (e.g. a per-device pathloss vector).
+    """
+    k1, k2 = jax.random.split(key)
+    std = jnp.sqrt(jnp.asarray(scale, jnp.float32) / 2.0)
+    return (jax.random.normal(k1, shape, jnp.float32) * std,
+            jax.random.normal(k2, shape, jnp.float32) * std)
+
+
+def gauss_markov_fading_step(key: jax.Array, h_re: jax.Array, h_im: jax.Array,
+                             rho: float, scale: jax.Array = 1.0) -> tuple:
+    """One AR(1) Gauss-Markov step of the complex fading state.
+
+        h_{t+1} = ρ·h_t + sqrt(1-ρ²)·w,   w ~ CN(0, scale)
+
+    The stationary distribution is preserved (h stays CN(0, scale), the
+    gain |h|² stays Exp(scale)), and the per-component lag-1
+    autocorrelation is exactly ρ — quasi-static block fading that drifts
+    between rounds instead of redrawing i.i.d. (the classic Gauss-Markov
+    / Jakes discretization).  ρ=0 recovers the i.i.d. per-round draw.
+    """
+    k1, k2 = jax.random.split(key)
+    std = jnp.sqrt(jnp.asarray(scale, jnp.float32) / 2.0)
+    c = jnp.sqrt(jnp.maximum(1.0 - rho * rho, 0.0)).astype(jnp.float32)
+    w_re = jax.random.normal(k1, h_re.shape, jnp.float32) * std
+    w_im = jax.random.normal(k2, h_im.shape, jnp.float32) * std
+    return rho * h_re + c * w_re, rho * h_im + c * w_im
+
+
 def transmission_time_s(payload_bits: jax.Array, bandwidth_hz: jax.Array,
                         rate_bps_hz: jax.Array) -> jax.Array:
     """τ = d·n / (B·r); infinite (outage) when r == 0."""

@@ -69,6 +69,44 @@ def uplink_phase_energy_j(ch_cfg: ChannelConfig, num_params: int,
     return out
 
 
+def capped_uplink_energy_j(ch_cfg: ChannelConfig, num_params: int, bits: int,
+                           rate_bps_hz: jnp.ndarray, tau_cap_s: float,
+                           tx_power_w: jnp.ndarray | None = None,
+                           wire_bits_per_param: float | None = None
+                           ) -> jnp.ndarray:
+    """eq. 9 with the radio cut off at the round deadline.
+
+    A device in a deep fade (rate → 0) would otherwise be charged an
+    unbounded transmission energy; physically it transmits until the
+    per-round latency limit ``tau_cap_s`` and gives up (the packet drops —
+    see ``population.errors``), so its energy is capped at
+    ``tau_cap_s · P_tx``.  This is the per-device round cost the fleet
+    battery model debits; ``wire_bits_per_param`` optionally prices the
+    payload at a realised collective's wire bits instead of the ideal d·n
+    (see ``population.fleet.round_cost_j`` for why the distributed round
+    keeps the default).
+    """
+    p = ch_cfg.tx_power_w if tx_power_w is None else tx_power_w
+    tau = uplink_time_s(ch_cfg, num_params, bits, rate_bps_hz,
+                        wire_bits_per_param=wire_bits_per_param)
+    return jnp.minimum(tau, tau_cap_s) * p
+
+
+def battery_debit_j(battery_j: jnp.ndarray, device_idx: jnp.ndarray,
+                    cost_j: jnp.ndarray) -> "tuple[jnp.ndarray, jnp.ndarray]":
+    """Debit per-device round costs from the fleet battery vector.
+
+    ``device_idx`` (K,) selects the charged devices, ``cost_j`` (K,) their
+    round energies (already zeroed for invalid cohort slots).  The realized
+    charge is clipped at the remaining battery so cells never go negative;
+    returns ``(new_battery_j, realized_charge_j)`` — the realized vector is
+    what telemetry sums, so total fleet energy decreases by EXACTLY the
+    charged amount (the battery-conservation invariant in the tests).
+    """
+    charge = jnp.minimum(battery_j[device_idx], cost_j.astype(jnp.float32))
+    return battery_j.at[device_idx].add(-charge), charge
+
+
 def uplink_time_s(ch_cfg: ChannelConfig, num_params: int, bits: int,
                   rate_bps_hz: jnp.ndarray,
                   wire_bits_per_param: float | None = None) -> jnp.ndarray:

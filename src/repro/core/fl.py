@@ -61,6 +61,17 @@ Two runtimes share the same math:
   See ``aggregation.py`` for the WirePlan abstraction the six modes hang
   off and ``quantization.pack_codes`` / ``kernels/pack.py`` for the wire
   formats.
+
+Both runtimes accept a **fleet** (``config.fleet.size > 0``): the device
+population of ``repro.population`` — per-device pathloss classes,
+Gauss-Markov AR(1) correlated fading carried across rounds, batteries
+debited by the §II-D energy model, availability, jit-able cohort
+selection and FBL-tied packet errors.  The simulator threads the
+``FleetState`` (plus the single split-per-round PRNG key) through its
+``lax.scan`` carry — the whole 10^6-device update stays inside the jitted
+scan; the distributed round threads it through the step signature
+(params, batch, rng, fleet) -> (params, metrics, fleet), replicated, and
+is bit-identical across every collective wire format.
 """
 from __future__ import annotations
 
@@ -78,9 +89,15 @@ from repro.core import aggregation as agg
 from repro.core import channel as ch
 from repro.core import energy as energy_mod
 from repro.core import quantization as quant
+from repro.population import errors as pop_errors
+from repro.population import fleet as pop_fleet
+from repro.population import telemetry as pop_tel
 from repro.utils import compat
 
 PyTree = Any
+
+#: fold_in tag deriving the fleet scan-carry key stream from the caller's rng
+_FLEET_STREAM = 0xF1EE7
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +128,18 @@ class FLSimulator:
         self.macs = macs_per_iter or config.energy.macs_per_iteration
         self._round_fn = jax.jit(self._round)
         self._scan_fns: Dict[Any, Callable] = {}
+        self._fleet_scan_fns: Dict[Any, Callable] = {}
+        # stateful heterogeneous population (None => the paper's homogeneous
+        # i.i.d. cohort).  The state persists ACROSS run_rounds calls so
+        # chunked train() keeps draining the same batteries / fading chain.
+        self.fleet_state: Optional[pop_fleet.FleetState] = None
+        if config.fleet.enabled:
+            if config.fleet.size < config.fl.devices_per_round:
+                raise ValueError(
+                    f"fleet.size={config.fleet.size} smaller than the "
+                    f"cohort devices_per_round={config.fl.devices_per_round}")
+            self.fleet_state = pop_fleet.init_fleet(
+                jax.random.PRNGKey(config.fleet.seed), config)
 
     # -- one client: I local steps of quantized SGD (eq. 4) -------------------
 
@@ -152,6 +181,88 @@ class FLSimulator:
             new_params = agg.naive_aggregate(params, deltas, lam)
         return new_params, losses.mean(), accs.mean(), lam.sum()
 
+    def _fleet_round(self, params, fleet, k_round, stacked_batches,
+                     client_alphas):
+        """One fleet round, fully inside the scan: advance the channel and
+        availability of the WHOLE fleet, select the cohort (masked top_k),
+        run the K client updates, realize FBL-tied drops, aggregate, and
+        debit the selected batteries.  All randomness derives from
+        ``k_round`` (split from the single key threaded in the scan carry
+        — reproducible under ``fl.seed``/``--seed``)."""
+        cfg = self.config
+        K = cfg.fl.devices_per_round
+        k_fleet, k_cli = jax.random.split(k_round)
+        fleet, info = pop_fleet.round_update(fleet, k_fleet, cfg,
+                                             self.num_params, K)
+
+        deltas, losses, accs = jax.vmap(
+            lambda b, r: self._client_update(params, b, r)
+        )(stacked_batches, jax.random.split(k_cli, K))
+
+        if cfg.fleet.error_reweight:
+            new_params = pop_errors.reweighted_aggregate(
+                params, deltas, client_alphas, info.valid, info.lam,
+                cfg.channel.error_prob, rates=info.rates_sel)
+        elif cfg.fl.error_aware:
+            new_params = agg.error_aware_aggregate(
+                params, deltas, client_alphas * info.valid, info.lam)
+        else:
+            new_params = agg.naive_aggregate(params, deltas, info.lam)
+
+        tau = jnp.max(info.valid * pop_fleet.round_latency_s(
+            cfg, info.rates_sel, self.num_params, self.macs))
+        tel = pop_tel.simulator_round_telemetry(
+            loss=losses.mean(), accuracy=accs.mean(), selected=info.idx,
+            valid=info.valid, lam=info.lam, battery_j=fleet.battery_j,
+            charge_j=info.charge_j, tau_s=tau)
+        return new_params, fleet, tel
+
+    def _fleet_scan_fn(self, eval_fn: Optional[Callable]) -> Callable:
+        """Jitted fleet-mode lax.scan: (params, FleetState, key) carry."""
+        key = eval_fn
+        if key not in self._fleet_scan_fns:
+
+            def body(carry, xs):
+                params, fleet, rng = carry
+                batches, alphas = xs
+                rng, k_round = jax.random.split(rng)
+                params, fleet, tel = self._fleet_round(params, fleet,
+                                                       k_round, batches,
+                                                       alphas)
+                tel["metric"] = (eval_fn(params) if eval_fn is not None
+                                 else tel["accuracy"])
+                return (params, fleet, rng), tel
+
+            self._fleet_scan_fns[key] = jax.jit(
+                lambda c, xs: jax.lax.scan(body, c, xs))
+        return self._fleet_scan_fns[key]
+
+    def _run_rounds_fleet(self, params, rounds: int, rng, *,
+                          eval_fn: Optional[Callable], start_round: int,
+                          return_rng: bool):
+        """Fleet-mode multi-round driver: ONE jitted ``lax.scan`` whose
+        carry threads (params, FleetState, per-round key).  The data side
+        (client minibatch stacking) is prepared before the scan exactly as
+        in the legacy path; every per-round fleet update — fading,
+        availability, selection, drops, battery debit — runs inside the
+        scan with no host round-trips (the 10^6-device workload)."""
+        per_round = []
+        rng_in = rng
+        for _ in range(rounds):
+            rng, k = jax.random.split(rng)
+            stacked, alphas, _ = self._round_inputs(k)
+            per_round.append((stacked, alphas))
+        xs = jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves),
+                                    *per_round)
+        carry = (params, self.fleet_state,
+                 jax.random.fold_in(rng_in, _FLEET_STREAM))
+        (params, fleet, _), tels = self._fleet_scan_fn(eval_fn)(carry, xs)
+        self.fleet_state = fleet
+        history = pop_tel.expand_history(tels, rounds, start_round)
+        if return_rng:
+            return params, history, rng
+        return params, history
+
     # -- public API -------------------------------------------------------------
 
     def _round_inputs(self, rng):
@@ -179,6 +290,16 @@ class FLSimulator:
         return stacked, client_alphas, k_run
 
     def run_round(self, params, rng) -> Tuple[PyTree, RoundTelemetry]:
+        if self.fleet_state is not None:
+            # fleet mode: ONE model of a round — delegate to the scan
+            # driver so selection/batteries/fading advance identically
+            params, hist = self._run_rounds_fleet(
+                params, 1, rng, eval_fn=None, start_round=0,
+                return_rng=False)
+            h = hist[0]
+            return params, RoundTelemetry(h["loss"], h["accuracy"],
+                                          h["survivors"], h["energy_j"],
+                                          h["tau_s"])
         stacked, client_alphas, k_run = self._round_inputs(rng)
         new_params, loss, acc, surv = self._round_fn(params, stacked,
                                                      client_alphas, k_run)
@@ -214,9 +335,23 @@ class FLSimulator:
         of ``rounds``.  Telemetry comes back stacked and is expanded into
         the same per-round history dicts ``train`` produces; ``eval_fn``
         (a jit-able params -> scalar metric) is folded into the scan body.
+
+        Fleet mode (``config.fleet.enabled``) dispatches to the fleet
+        scan instead: (params, FleetState, per-round key) in the carry,
+        history extended with the population telemetry, and the fleet
+        persisting on ``self.fleet_state`` across calls (``run_round``
+        delegates here, so both entry points advance the same fleet —
+        though each call re-derives its carry key from its own ``rng``,
+        so N single-round calls and one N-round scan follow different
+        PRNG chains).
         """
         if rounds <= 0:
             return (params, [], rng) if return_rng else (params, [])
+        if self.fleet_state is not None:
+            return self._run_rounds_fleet(params, rounds, rng,
+                                          eval_fn=eval_fn,
+                                          start_round=start_round,
+                                          return_rng=return_rng)
         per_round = []
         for _ in range(rounds):
             rng, k = jax.random.split(rng)
@@ -237,7 +372,7 @@ class FLSimulator:
         """Expected per-round energy (J) and latency (s) at the operating point."""
         cfg = self.config
         bits = cfg.quant.bits if cfg.quant.enabled else 32
-        key = jax.random.PRNGKey(0)
+        key = jax.random.PRNGKey(cfg.fl.seed)  # seed-reproducible MC draw
         g2 = ch.sample_rayleigh_gain2(key, (cfg.fl.num_devices,),
                                       cfg.channel.rayleigh_scale)
         rate = ch.fbl_rate(ch.snr(cfg.channel.tx_power_w, g2, cfg.channel.noise_w),
@@ -329,13 +464,22 @@ def make_fl_round(model, config: Config, mesh, *,
     | "auto" (cost-model pick of the byte-minimal mode for this mesh)
     | None (the default — resolve ``config.quant.wire_format``).
 
-    Returned fn: (params, batch, rng) -> (params, metrics).
+    Returned fn: (params, batch, rng) -> (params, metrics) — or, when
+    ``config.fleet.enabled``, (params, batch, rng, fleet) ->
+    (params, metrics, fleet) with a ``population.fleet.FleetState``
+    threaded through (replicated): the fleet advances its AR(1) fading /
+    availability, a jit-able policy selects one device per cohort shard,
+    λ realizes from each device's FBL operating point, and the selected
+    batteries are debited — identical under every collective mode.
+
     ``batch`` leaves are (global_batch, ...) sharded over the data axes;
     each shard is one client cohort.  ``metrics["wire_bits_per_param"]``
     reports the bits each device actually puts on the wire per parameter
     (after "auto" resolution and degenerate fallbacks — e.g. "packed"
     silently becomes "int" when the guard lane exceeds 32 bits), the
-    number energy accounting must charge.
+    number energy accounting must charge; the per-phase split rides next
+    to it as ``metrics["wire_phase_bits_per_param"]`` (e.g. rsag's
+    reduce_scatter/all_gather legs — ``population.telemetry``).
     """
     fl = config.fl
     qcfg = config.quant
@@ -348,14 +492,23 @@ def make_fl_round(model, config: Config, mesh, *,
     axis_sizes = tuple(int(mesh.shape[a]) for a in axes)
     num_shards = int(np.prod(axis_sizes))
     plan = agg.make_wire_plan(collective, qcfg, axes, axis_sizes)
-    wire_bits = plan.wire_bits
     eta = fl.learning_rate
+    with_fleet = config.fleet.enabled
+    if with_fleet:
+        if config.fleet.size < num_shards:
+            raise ValueError(
+                f"fleet.size={config.fleet.size} smaller than the cohort "
+                f"shard count {num_shards}")
+        num_params = int(sum(
+            np.prod(s.shape) for s in jax.tree_util.tree_leaves(
+                jax.eval_shape(model.init, jax.random.PRNGKey(0)))))
 
-    def local_round(params, batch, rng):
-        # distinct PRNG stream per client cohort (shard of the data axes)
-        for a in axes:
-            rng = jax.random.fold_in(rng, jax.lax.axis_index(a))
-
+    def _cohort_update(params, batch, rng, lam, delta_scale=None):
+        """I local steps + planned collective for ONE cohort shard; ``rng``
+        is already the per-shard stream, ``lam`` this cohort's λ.
+        ``delta_scale`` rescales the aggregated delta after the collective
+        (the fleet's opt-in IPW correction — a replicated scalar, so every
+        wire format stays bit-identical)."""
         # split the cohort batch into I microbatches (the ξ_k stream, eq. 4);
         # the remainder (local_batch % I) is dropped
         I = fl.local_iters
@@ -376,32 +529,86 @@ def make_fl_round(model, config: Config, mesh, *,
         delta = jax.tree_util.tree_map(lambda a_, b_: (a_ - b_).astype(jnp.float32),
                                        p_local, params)
 
-        lam = ch.sample_packet_success(jax.random.fold_in(rng, 11), (),
-                                       config.channel.error_prob)
         alpha = jnp.float32(1.0 / num_shards)
         k_q = jax.random.fold_in(rng, 13)
         agg_delta = agg.aggregate(plan, delta, alpha, lam, k_q)
+        if delta_scale is not None:
+            agg_delta = jax.tree_util.tree_map(lambda d: d * delta_scale,
+                                               agg_delta)
 
         new_params = jax.tree_util.tree_map(
             lambda w, d: w + d.astype(w.dtype), params, agg_delta)
         mean_loss = jax.lax.pmean(losses.mean(), axes)
         survivors = jax.lax.psum(lam, axes)
-        return new_params, {"loss": mean_loss, "survivors": survivors,
-                            "wire_bits_per_param": jnp.float32(wire_bits)}
+        return new_params, mean_loss, survivors
 
-    batch_spec = jax.sharding.PartitionSpec(axes if len(axes) > 1 else axes[0])
-    shmapped = compat.shard_map(
+    def _shard_rng(rng):
+        # distinct PRNG stream per client cohort (shard of the data axes)
+        for a in axes:
+            rng = jax.random.fold_in(rng, jax.lax.axis_index(a))
+        return rng
+
+    def local_round(params, batch, rng):
+        rng = _shard_rng(rng)
+        lam = ch.sample_packet_success(jax.random.fold_in(rng, 11), (),
+                                       config.channel.error_prob)
+        new_params, mean_loss, survivors = _cohort_update(params, batch,
+                                                          rng, lam)
+        return new_params, pop_tel.distributed_metrics(
+            plan, loss=mean_loss, survivors=survivors)
+
+    def fleet_round(params, batch, rng, fleet):
+        # the fleet update is REPLICATED: identical inputs (fleet, raw rng)
+        # on every shard compute the identical selection, so each shard
+        # just reads its own λ at its flat cohort index — no collective.
+        # battery pricing deliberately uses the wire-format-INDEPENDENT
+        # d·n payload (round_cost_j default), not plan.wire_bits: the
+        # fleet trajectory (batteries -> eligibility -> selection -> λ)
+        # must be identical under every collective so the aggregated
+        # model stays bit-identical across wire formats (the acceptance
+        # invariant test_distributed asserts).  The realised per-phase
+        # wire bits ride in the metrics for infrastructure accounting;
+        # callers wanting wire-priced debits pass wire_bits_per_param.
+        fleet, info = pop_fleet.round_update(
+            fleet, jax.random.fold_in(rng, _FLEET_STREAM), config,
+            num_params, num_shards)
+        shard = jnp.int32(0)
+        for a, s in zip(axes, axis_sizes):
+            shard = shard * s + jax.lax.axis_index(a)
+        delta_scale = None
+        if config.fleet.error_reweight:
+            delta_scale = pop_errors.ipw_delta_scale(
+                info.lam, info.valid, info.rates_sel,
+                config.channel.error_prob)
+
+        new_params, mean_loss, survivors = _cohort_update(
+            params, batch, _shard_rng(rng), info.lam[shard], delta_scale)
+
+        metrics = pop_tel.distributed_metrics(
+            plan, loss=mean_loss, survivors=survivors,
+            fleet=pop_tel.fleet_round_metrics(battery_j=fleet.battery_j,
+                                              valid=info.valid,
+                                              charge_j=info.charge_j))
+        return new_params, metrics, fleet
+
+    P = jax.sharding.PartitionSpec
+    batch_spec = P(axes if len(axes) > 1 else axes[0])
+    batch_specs = jax.tree_util.tree_map(lambda _: batch_spec,
+                                         _batch_structure(model, config))
+    metric_specs = jax.tree_util.tree_map(
+        lambda _: P(), pop_tel.distributed_metrics_structure(plan,
+                                                             with_fleet))
+    if with_fleet:
+        return compat.shard_map(
+            fleet_round, mesh=mesh,
+            in_specs=(P(), batch_specs, P(), P()),
+            out_specs=(P(), metric_specs, P()),
+            check_vma=False, axis_names=set(axes))
+    return compat.shard_map(
         local_round, mesh=mesh,
-        in_specs=(jax.sharding.PartitionSpec(),
-                  jax.tree_util.tree_map(lambda _: batch_spec,
-                                         _batch_structure(model, config)),
-                  jax.sharding.PartitionSpec()),
-        out_specs=(jax.sharding.PartitionSpec(),
-                   {"loss": jax.sharding.PartitionSpec(),
-                    "survivors": jax.sharding.PartitionSpec(),
-                    "wire_bits_per_param": jax.sharding.PartitionSpec()}),
+        in_specs=(P(), batch_specs, P()),
+        out_specs=(P(), metric_specs),
         check_vma=False, axis_names=set(axes))
-    return shmapped
 
 
 def _batch_structure(model, config: Config):

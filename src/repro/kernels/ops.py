@@ -71,11 +71,15 @@ def pack_sums(codes: jax.Array, bits: int, *, lane_bits: int = 0,
 
 def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,
                       clip: float = 1.0, lane_bits: int = 0,
-                      sum_of: int = 1) -> jax.Array:
-    """Fused unpack+dequantize through the kernel: wire words -> flat f32."""
+                      sum_of: int = 1, bias: int | None = None) -> jax.Array:
+    """Fused unpack+dequantize through the kernel: wire words -> flat f32.
+
+    ``bias`` overrides the sum_of·G un-bias (the rsag all-gather's
+    lane-symmetric bias) so finished chunks land as f32 directly — the
+    fused scatter-store variant skipping the int32 round-trip."""
     return _pack.unpack_dequantize(packed, bits, size, clip=clip,
                                    lane_bits=lane_bits, sum_of=sum_of,
-                                   interpret=_INTERPRET)
+                                   bias=bias, interpret=_INTERPRET)
 
 
 def qmatmul(x_q: jax.Array, w_q: jax.Array, sx, sw) -> jax.Array:

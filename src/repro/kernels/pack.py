@@ -114,19 +114,27 @@ def _unpack_dequantize_kernel(words_ref, out_ref, *, lane: int, cpw: int,
     shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane).reshape(cpw, 1, 1)
     mask = jnp.uint32(2 ** lane - 1)
     lanes = (words[None] >> shifts) & mask                  # (cpw, BR, LANES)
-    out_ref[...] = (lanes.astype(jnp.int32) - bias).astype(jnp.float32) * inv_gain
+    # modular uint32 un-bias (exact for biases up to the full lane width,
+    # e.g. the rsag lane_bias 2^(lane-1) at lane 32)
+    vals = (lanes - jnp.uint32(bias)).astype(jnp.int32)
+    out_ref[...] = vals.astype(jnp.float32) * inv_gain
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "size", "clip",
-                                             "lane_bits", "sum_of",
+                                             "lane_bits", "sum_of", "bias",
                                              "interpret"))
 def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,
                       clip: float = 1.0, lane_bits: int = 0, sum_of: int = 1,
+                      bias: int | None = None,
                       interpret: bool = True) -> jax.Array:
     """Fused unpack+dequantize: uint32 words -> flat f32 of length ``size``.
 
     ``sum_of`` un-biases an aggregated buffer (psum of ``sum_of`` packed
-    shards adds one +G per summand per lane).
+    shards adds one +G per summand per lane); ``bias`` overrides the
+    sum_of·G un-bias with an explicit value (the rsag collective's
+    lane-symmetric ``quantization.lane_bias`` — what lets its all-gather
+    store land dequantized f32 chunks directly, skipping the int32
+    round-trip on the last level).
     """
     lane = lane_bits or bits
     if lane > 32:
@@ -142,7 +150,8 @@ def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,
     inv_gain = clip / float(2 ** (bits - 1))
     planes = pl.pallas_call(
         functools.partial(_unpack_dequantize_kernel, lane=lane, cpw=cpw,
-                          bias=g * int(sum_of), inv_gain=inv_gain),
+                          bias=g * int(sum_of) if bias is None else int(bias),
+                          inv_gain=inv_gain),
         grid=(R // BLOCK_ROWS,),
         in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((cpw, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),

@@ -30,10 +30,16 @@ def quantize_pack_ref(x: jnp.ndarray, u: jnp.ndarray, bits: int, *,
 
 def unpack_dequantize_ref(packed: jnp.ndarray, bits: int, size: int, *,
                           clip: float = 1.0, lane_bits: int = 0,
-                          sum_of: int = 1) -> jnp.ndarray:
-    """Oracle for the fused unpack+dequantize kernel (flat f32 of ``size``)."""
+                          sum_of: int = 1,
+                          bias: int | None = None) -> jnp.ndarray:
+    """Oracle for the fused unpack+dequantize kernel (flat f32 of ``size``).
+
+    ``bias`` overrides the sum_of·G un-bias — the rsag all-gather store
+    variant (lane-symmetric ``lane_bias``), whose finished chunks are
+    dequantized straight out of the wire words with no int32 round-trip."""
     from repro.core.quantization import unpack_codes
-    codes = unpack_codes(packed, bits, size, lane_bits=lane_bits, sum_of=sum_of)
+    codes = unpack_codes(packed, bits, size, lane_bits=lane_bits,
+                         sum_of=sum_of, bias=bias)
     return dequantize_ref(codes, bits, clip=clip)
 
 

@@ -30,7 +30,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import Config
+from repro.config.base import SELECTION_POLICIES, Config
 from repro.configs import (ASSIGNED_ARCHS, for_shape, get_config,
                            supports_shape)
 from repro.configs.shapes import SHAPES, get_shape
@@ -57,12 +57,18 @@ def rng_struct():
 def lower_combo(arch: str, shape_name: str, multi_pod: bool, *,
                 collective: Optional[str] = None,
                 config: Optional[Config] = None,
-                mesh=None, suffix: str = ""):
+                mesh=None, suffix: str = "",
+                fleet_overrides: tuple = ()):
     """Lower+compile one combo; returns the result record (dict).
 
-    ``collective=None`` resolves the config's ``quant.wire_format``."""
+    ``collective=None`` resolves the config's ``quant.wire_format``;
+    ``fleet_overrides`` are ``fleet.*`` key=value strings enabling the
+    population layer (the FL round then threads a FleetState)."""
     shape = get_shape(shape_name)
     base = config if config is not None else get_config(arch)
+    if fleet_overrides:
+        from repro.config.base import apply_overrides
+        base = apply_overrides(base, fleet_overrides)
     collective = fl_mod.resolve_collective(base, collective)
     if not supports_shape(base, shape):
         return {"arch": arch, "shape": shape_name,
@@ -92,11 +98,26 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool, *,
                                                    collective=collective)
             step_kind = f"train/{kind}"
             b_structs, b_shardings = inputs_mod.train_batch_specs(cfg, shape, mesh)
-            jitted = jax.jit(step,
-                             in_shardings=(p_shardings, b_shardings, rng_sh),
-                             out_shardings=(p_shardings, None),
-                             donate_argnums=(0,))
-            lowered = jitted.lower(p_structs, b_structs, rng_struct())
+            if kind == "fleet_fl_round":
+                # the fleet threads through replicated; lower with its structs
+                from repro.population import fleet as pfleet
+                f_structs = jax.eval_shape(
+                    lambda k: pfleet.init_fleet(k, cfg), jax.random.PRNGKey(0))
+                f_shardings = jax.tree_util.tree_map(lambda _: rng_sh,
+                                                     f_structs)
+                jitted = jax.jit(step,
+                                 in_shardings=(p_shardings, b_shardings,
+                                               rng_sh, f_shardings),
+                                 out_shardings=(p_shardings, None, None),
+                                 donate_argnums=(0,))
+                lowered = jitted.lower(p_structs, b_structs, rng_struct(),
+                                       f_structs)
+            else:
+                jitted = jax.jit(step,
+                                 in_shardings=(p_shardings, b_shardings, rng_sh),
+                                 out_shardings=(p_shardings, None),
+                                 donate_argnums=(0,))
+                lowered = jitted.lower(p_structs, b_structs, rng_struct())
         elif shape.kind == "prefill":
             step = steps_mod.make_prefill_step(model, cfg)
             structs, shardings = inputs_mod.prefill_specs(cfg, shape, mesh)
@@ -202,10 +223,16 @@ def run(args) -> int:
                 if args.skip_existing and os.path.exists(path):
                     print(f"[skip] {tag}")
                     continue
+                fleet_overrides = ()
+                if args.fleet_size:
+                    fleet_overrides += (f"fleet.size={args.fleet_size}",)
+                if args.selection:
+                    fleet_overrides += (f"fleet.selection={args.selection}",)
                 try:
                     rec = lower_combo(arch, shape_name, multi,
                                       collective=args.collective,
-                                      suffix=args.suffix)
+                                      suffix=args.suffix,
+                                      fleet_overrides=fleet_overrides)
                 except Exception as e:  # a failure here is a sharding bug
                     failures += 1
                     rec = {"arch": arch, "shape": shape_name,
@@ -238,6 +265,12 @@ def main():
                     help="wire format; 'auto' picks the byte-minimal mode "
                          "for the mesh (default: quant.wire_format from "
                          "config)")
+    ap.add_argument("--fleet-size", type=int, default=0,
+                    help="enable the device population layer with this many "
+                         "devices (fleet.size override)")
+    ap.add_argument("--selection", default=None,
+                    choices=list(SELECTION_POLICIES),
+                    help="fleet cohort selection policy (fleet.selection)")
     ap.add_argument("--suffix", default="")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
     ap.add_argument("--skip-existing", action="store_true")

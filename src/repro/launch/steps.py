@@ -37,13 +37,18 @@ def make_standard_train_step(model, config: Config) -> Callable:
 def make_train_step(model, config: Config, mesh, *,
                     collective: Optional[str] = None,
                     force_standard: bool = False) -> Tuple[Callable, str]:
-    """Returns (step_fn, kind) with kind in {"fl_round", "standard"}.
+    """Returns (step_fn, kind) with kind in {"fl_round", "fleet_fl_round",
+    "standard"}.
 
-    ``collective=None`` resolves ``config.quant.wire_format``."""
+    ``collective=None`` resolves ``config.quant.wire_format``.  When
+    ``config.fleet.enabled`` the FL round threads a
+    ``population.fleet.FleetState`` — signature (params, batch, rng,
+    fleet) -> (params, metrics, fleet) — and kind is "fleet_fl_round"."""
     if not force_standard:
         fl_round = fl_mod.make_fl_round(model, config, mesh, collective=collective)
         if fl_round is not None:
-            return fl_round, "fl_round"
+            kind = "fleet_fl_round" if config.fleet.enabled else "fl_round"
+            return fl_round, kind
     return make_standard_train_step(model, config), "standard"
 
 

@@ -5,6 +5,24 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
       model.n_layers=2 model.d_model=256 model.vocab_size=512 \
       train.global_batch=8 train.seq_len=64 train.steps=10 --devices 8
+
+Fleet mode (``--fleet-size N`` / ``--selection POLICY``, or the
+``fleet.*`` config overrides): the FL round draws its cohort from a
+stateful heterogeneous device population instead of the paper's
+homogeneous i.i.d. sampling — per-device pathloss classes, Gauss-Markov
+AR(1) correlated Rayleigh fading carried across rounds, batteries (J)
+debited by the §II-D energy model, and per-round availability.  A
+jit-able policy (uniform | rate_aware | energy_aware | round_robin; see
+``repro.population.selection``) picks one device per cohort shard via a
+masked top_k over the WHOLE fleet — dead or sleeping devices are never
+selected — and packet errors realize from each device's FBL operating
+point (outage ⇒ certain drop).  The ``FleetState`` threads through the
+step loop; every collective wire format produces the bit-identical model
+under any (fleet, policy) pair.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
+      --fleet-size 1000000 --selection rate_aware --collective auto \
+      model.n_layers=2 train.global_batch=8 train.seq_len=64 --devices 8
 """
 from __future__ import annotations
 
@@ -12,7 +30,7 @@ import argparse
 import os
 import time
 
-from repro.config.base import COLLECTIVE_CHOICES  # jax-free
+from repro.config.base import COLLECTIVE_CHOICES, SELECTION_POLICIES  # jax-free
 
 
 def main():
@@ -25,6 +43,14 @@ def main():
                     help="wire format; 'auto' picks the byte-minimal mode "
                          "for the mesh (default: quant.wire_format from "
                          "config)")
+    ap.add_argument("--fleet-size", type=int, default=0,
+                    help="enable the heterogeneous device population with "
+                         "this many devices (fleet.size override; 0 keeps "
+                         "the paper's homogeneous cohort)")
+    ap.add_argument("--selection", default=None,
+                    choices=list(SELECTION_POLICIES),
+                    help="fleet cohort selection policy (fleet.selection "
+                         "override)")
     ap.add_argument("--steps", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
@@ -52,7 +78,12 @@ def main():
     from repro.sharding.context import use_sharding_rules
     from repro.utils import compat
 
-    cfg = apply_overrides(get_config(args.arch), tuple(args.overrides))
+    overrides = tuple(args.overrides)
+    if args.fleet_size:
+        overrides += (f"fleet.size={args.fleet_size}",)
+    if args.selection:
+        overrides += (f"fleet.selection={args.selection}",)
+    cfg = apply_overrides(get_config(args.arch), overrides)
     model = build_model(cfg)
     n_dev = len(jax.devices())
     if n_dev >= 512:
@@ -72,19 +103,41 @@ def main():
                                               collective=collective)
     print(f"step kind: {kind} (collective={collective}, "
           f"quant bits={cfg.quant.bits}, q={cfg.channel.error_prob})")
+    fleet = None
+    if kind == "fleet_fl_round":
+        from repro.population import fleet as pfleet
+        fleet = pfleet.init_fleet(jax.random.PRNGKey(cfg.fleet.seed), cfg)
+        print(f"fleet: {cfg.fleet.size} devices, "
+              f"selection={cfg.fleet.selection}, "
+              f"rho={cfg.fleet.fading_rho}, "
+              f"battery={cfg.fleet.battery_j}J")
 
     p_shardings = rules_mod.param_shardings(model, cfg, mesh)
     with compat.set_mesh(mesh), use_sharding_rules(mesh):
         params = jax.jit(model.init, out_shardings=p_shardings)(
             jax.random.PRNGKey(cfg.fl.seed))
+        fleet_ckpt_dir = (os.path.join(args.checkpoint_dir, "fleet")
+                          if args.checkpoint_dir else "")
         start = 0
         if args.checkpoint_dir and latest_step(args.checkpoint_dir) is not None:
             start = latest_step(args.checkpoint_dir)
             params = restore_checkpoint(args.checkpoint_dir, params)
             print(f"restored checkpoint step {start}")
-        jitted = jax.jit(step_fn, in_shardings=(p_shardings, None, None),
-                         out_shardings=(p_shardings, None),
-                         donate_argnums=(0,))
+            if fleet is not None and latest_step(fleet_ckpt_dir) is not None:
+                # resume the SAME population: drained batteries, fading
+                # chain and cursor — not a fresh round-0 fleet
+                fleet = restore_checkpoint(fleet_ckpt_dir, fleet)
+                print(f"restored fleet state step "
+                      f"{latest_step(fleet_ckpt_dir)}")
+        if fleet is not None:
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_shardings, None, None, None),
+                             out_shardings=(p_shardings, None, None),
+                             donate_argnums=(0,))
+        else:
+            jitted = jax.jit(step_fn, in_shardings=(p_shardings, None, None),
+                             out_shardings=(p_shardings, None),
+                             donate_argnums=(0,))
 
         key = jax.random.PRNGKey(cfg.fl.seed + 1)
         t0 = time.time()
@@ -92,7 +145,10 @@ def main():
             key, k_data, k_step = jax.random.split(key, 3)
             batch = token_batch(k_data, cfg.train.global_batch,
                                 cfg.train.seq_len, cfg.model.vocab_size)
-            params, metrics = jitted(params, batch, k_step)
+            if fleet is not None:
+                params, metrics, fleet = jitted(params, batch, k_step, fleet)
+            else:
+                params, metrics = jitted(params, batch, k_step)
             if step % args.log_every == 0:
                 loss = float(metrics["loss"])
                 tok_s = (cfg.train.global_batch * cfg.train.seq_len
@@ -103,9 +159,14 @@ def main():
                 if "wire_bits_per_param" in metrics:
                     extra += (" wire_bits/param="
                               f"{float(metrics['wire_bits_per_param']):.2f}")
+                if "battery_q50_j" in metrics:
+                    extra += (f" batt_med={float(metrics['battery_q50_j']):.1f}J"
+                              f" E_round={float(metrics['cohort_energy_j']):.2f}J")
                 print(f"step {step:5d} loss={loss:.4f} tok/s={tok_s:,.0f}{extra}")
             if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
                 save_checkpoint(args.checkpoint_dir, step + 1, params)
+                if fleet is not None:
+                    save_checkpoint(fleet_ckpt_dir, step + 1, fleet)
         print(f"done: {steps - start} steps in {time.time()-t0:.1f}s")
 
 

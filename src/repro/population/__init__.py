@@ -1,0 +1,31 @@
+"""Fleet-scale device population layer (beyond-paper).
+
+The paper simulates N=100 homogeneous devices with i.i.d. per-round fading
+and uniform participation.  Real IoT fleets are populations: unequal
+pathloss classes, channels that drift between rounds, batteries that
+drain, devices that sleep.  This package models that population as pure,
+scan-compatible jnp state so the whole fleet update lives INSIDE the
+jitted round scan (verified at 10^6 devices — no per-round host
+round-trips):
+
+  fleet.py      ``FleetState`` (a pytree carried across rounds): per-device
+                pathloss class, Gauss-Markov AR(1) correlated Rayleigh
+                fading, battery energy (J) debited by the §II-D model, and
+                a per-round availability trace.
+  selection.py  jit-able cohort selection over the full fleet via masked
+                ``top_k``: uniform / rate_aware / energy_aware /
+                round_robin; dead or unavailable devices are never selected.
+  errors.py     per-round packet-error realization tied to the FBL
+                operating point q (outage ⇒ certain drop) and the opt-in
+                unbiased 1/(1-q) reweighting correction.
+  telemetry.py  the ONE place round metrics are assembled: cohort /
+                drops / battery quantiles plus the per-phase
+                ``wire_phase_bits_per_param`` split of the collective.
+
+``core.fl`` threads a ``FleetState`` through the ``FLSimulator.run_rounds``
+scan carry and through the distributed ``make_fl_round`` (every collective
+wire format runs unchanged under any (fleet, policy) pair).
+"""
+from repro.population import errors, fleet, selection, telemetry
+
+__all__ = ["errors", "fleet", "selection", "telemetry"]

@@ -1,0 +1,120 @@
+"""Per-round packet-error realization tied to the FBL operating point.
+
+The seed simulator drew λ_k ~ Bernoulli(1-q) with a FIXED ``error_prob``
+regardless of the channel.  Here the drop probability follows the
+finite-blocklength operating point each device actually runs at:
+
+* a device whose achieved FBL rate is positive decodes with the target
+  error probability q — the *chosen* operating point of the
+  rate-adaptive FBL scheme (paper §II-D2), exactly the old Bernoulli;
+* a device in OUTAGE (rate clipped to 0 by a deep fade) cannot complete
+  the uplink inside the round deadline — its packet drops with
+  probability 1.
+
+With correlated AR(1) fading this couples drops across rounds the way a
+real fleet experiences them (a faded device keeps dropping until the
+channel recovers) and makes rate-aware selection measurably reduce the
+drop rate.
+
+The module also owns the **unbiased reweighting correction** (opt-in via
+``FleetConfig.error_reweight``): instead of renormalizing by the REALIZED
+surviving mass Σα_kλ_k (paper eq. 6 — unbiased direction, biased
+magnitude), each surviving update is scaled by 1/(1-q) so the aggregate
+is exactly unbiased over drop realizations:
+
+    E[ Σ α_k λ_k Δ_k / (1-q) ] = Σ α_k Δ_k        (λ_k ~ Bern(1-q))
+
+— the inverse-probability-weighting estimator of the partial-participation
+FedAvg literature.  Outage devices (survival probability 0, λ ≡ 0) cannot
+be inverse-weighted; they are excluded from the expected mass, so the
+estimator is unbiased for the REACHABLE cohort (the standard IPW
+positivity restriction).  Both runtimes share the math:
+:func:`reweighted_aggregate` is the explicit per-α form the simulator
+uses; :func:`ipw_delta_scale` is the equivalent post-aggregation scalar
+the distributed round multiplies onto the eq.-6-normalized collective
+output (exact because its cohort weights are uniform).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+EPS = 1e-12
+
+
+def packet_error_probs(rates: jax.Array, error_prob: jax.Array) -> jax.Array:
+    """Per-device drop probability at the FBL operating point.
+
+    q where the achieved rate supports the uplink; 1.0 in outage
+    (rate <= 0 — the fbl_rate clip of a deep fade).
+    """
+    return jnp.where(rates > 0, jnp.float32(error_prob), jnp.float32(1.0))
+
+
+def realize_packet_success(key: jax.Array, rates: jax.Array,
+                           error_prob: jax.Array) -> jax.Array:
+    """λ reliability draws: 1 w.p. 1-q per device, always 0 in outage."""
+    p = packet_error_probs(rates, error_prob)
+    return (jax.random.uniform(key, rates.shape) >= p).astype(jnp.float32)
+
+
+def inverse_prob_weights(lam: jax.Array, error_prob: jax.Array) -> jax.Array:
+    """λ/(1-q) — the unbiased inverse-probability participation weights."""
+    return lam / jnp.maximum(1.0 - jnp.float32(error_prob), EPS)
+
+
+def _reachable(valid: jax.Array, rates: jax.Array | None) -> jax.Array:
+    """Slots whose device can survive at all (valid and not in outage)."""
+    if rates is None:
+        return valid
+    return valid * (rates > 0).astype(jnp.float32)
+
+
+def reweighted_aggregate(w: PyTree, deltas: PyTree, alphas: jax.Array,
+                         valid: jax.Array, lam: jax.Array,
+                         error_prob: jax.Array,
+                         rates: jax.Array | None = None) -> PyTree:
+    """The opt-in unbiased aggregation: w + Σ α λ Δ / ((1-q)·Σ_reach α).
+
+    The denominator is the EXPECTED surviving mass of the selected cohort
+    ((1-q)·Σ α over the reachable slots), not the realized Σαλ of eq. 6 —
+    unbiased over drop realizations at the cost of a higher variance when
+    many packets drop.  ``valid`` masks unfilled cohort slots; ``rates``
+    (the selected devices' achieved FBL rates) additionally excludes
+    outage devices (survival probability 0 — λ ≡ 0, so they contribute
+    nothing to the numerator and must not count in the expected mass
+    either, or the estimator shrinks toward zero whenever a faded device
+    is selected).
+    """
+    K = lam.shape[0]
+    reach = _reachable(valid, rates)
+    # λ ≡ 0 in outage, so the reach mask only matters in the denominator
+    wts = alphas * reach * inverse_prob_weights(lam, error_prob)
+    den = jnp.maximum(jnp.sum(alphas * reach), EPS)
+
+    def agg(wl, dl):
+        ww = wts.reshape((K,) + (1,) * (dl.ndim - 1))
+        return wl + (jnp.sum(dl * ww, axis=0) / den).astype(wl.dtype)
+
+    return jax.tree_util.tree_map(agg, w, deltas)
+
+
+def ipw_delta_scale(lam: jax.Array, valid: jax.Array,
+                    rates: jax.Array | None,
+                    error_prob: jax.Array) -> jax.Array:
+    """Scalar turning an eq.-6-normalized aggregate into the unbiased IPW
+    estimator, for UNIFORM cohort weights (the distributed round's
+    α = 1/K): the collective computes Σ λΔ / Σλ; multiplying by
+
+        Σλ / ((1-q) · Σ_reach 1)
+
+    yields Σ λΔ / ((1-q)·n_reach) — exactly
+    :func:`reweighted_aggregate`.  Replicated-computable (no collectives);
+    0 when nobody survives, so an all-dropped round stays a no-op.
+    """
+    reach = _reachable(valid, rates)
+    den = jnp.maximum((1.0 - jnp.float32(error_prob)) * jnp.sum(reach), EPS)
+    return jnp.sum(lam) / den

@@ -1,0 +1,215 @@
+"""Vectorized fleet state: the device population as pure jnp arrays.
+
+``FleetState`` is a NamedTuple (hence a jax pytree) of (N,) per-device
+vectors — it rides in a ``lax.scan`` carry, crosses ``shard_map``
+replicated, and every update below is O(N) elementwise jnp (plus one
+``top_k`` in selection), so a 10^6-device fleet advances entirely inside
+the jitted round without host round-trips.
+
+The channel model composes the paper's quasi-static Rayleigh blocks with
+two population axes:
+
+* a static per-device **pathloss class** (``FleetConfig.pathloss_classes``
+  mean-gain multipliers, e.g. cell-edge vs cell-center devices), and
+* **temporal correlation**: the complex fading state evolves by the
+  Gauss-Markov AR(1) step (``channel.gauss_markov_fading_step``) instead
+  of an i.i.d. redraw, so a device in a deep fade stays faded for ~1/(1-ρ)
+  rounds — the regime where rate-aware selection actually matters.
+
+Batteries are debited by the §II-D energy model (local compute + uplink
+at the device's achieved FBL rate, radio capped at the round deadline);
+a device whose battery cannot cover the round cost is ineligible until
+recharged (no recharge model yet — fleets drain monotonically).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import SELECTION_POLICIES, Config
+from repro.core import channel as ch
+from repro.core import energy as energy_mod
+
+
+class FleetState(NamedTuple):
+    """Per-device population state carried across rounds (all (N,) f32
+    except the scalar round-robin cursor)."""
+    h_re: jax.Array        # complex fading state, real part
+    h_im: jax.Array        # complex fading state, imaginary part
+    pathloss: jax.Array    # static mean-|h|² multiplier (class gain)
+    battery_j: jax.Array   # remaining battery energy (J)
+    available: jax.Array   # current-round availability {0., 1.}
+    rr_cursor: jax.Array   # () int32 — round_robin scan pointer
+
+    @property
+    def size(self) -> int:
+        return self.battery_j.shape[0]
+
+    def gain2(self) -> jax.Array:
+        """Current channel power gain |h|² (pathloss folded into h)."""
+        return self.h_re * self.h_re + self.h_im * self.h_im
+
+
+def init_fleet(key: jax.Array, config: Config) -> FleetState:
+    """Draw the initial fleet from ``config.fleet`` (pure; jit-able).
+
+    Pathloss classes are sampled from ``class_probs`` (uniform when
+    empty), the fading state starts at its stationary distribution
+    (CN(0, rayleigh_scale·pathloss)) and batteries spread uniformly over
+    ``battery_j·(1 ± battery_spread)``.  Everybody starts available; the
+    first availability draw happens in :func:`advance_channel`.
+    """
+    fcfg = config.fleet
+    if not fcfg.enabled:
+        raise ValueError("init_fleet needs fleet.size > 0")
+    if fcfg.selection not in SELECTION_POLICIES:
+        raise ValueError(f"unknown fleet.selection {fcfg.selection!r}")
+    n = int(fcfg.size)
+    k_cls, k_h, k_b = jax.random.split(key, 3)
+    classes = jnp.asarray(fcfg.pathloss_classes, jnp.float32)
+    probs = (jnp.asarray(fcfg.class_probs, jnp.float32)
+             if fcfg.class_probs else None)
+    cls_idx = jax.random.choice(k_cls, classes.shape[0], (n,), p=probs)
+    pathloss = classes[cls_idx]
+    scale = config.channel.rayleigh_scale * pathloss
+    h_re, h_im = ch.init_rayleigh_state(k_h, (n,), scale)
+    spread = fcfg.battery_spread
+    battery = fcfg.battery_j * (
+        1.0 + spread * (2.0 * jax.random.uniform(k_b, (n,)) - 1.0))
+    return FleetState(h_re=h_re, h_im=h_im, pathloss=pathloss,
+                      battery_j=battery.astype(jnp.float32),
+                      available=jnp.ones((n,), jnp.float32),
+                      rr_cursor=jnp.zeros((), jnp.int32))
+
+
+def advance_channel(state: FleetState, key: jax.Array,
+                    config: Config) -> FleetState:
+    """One round of channel/availability evolution for the whole fleet.
+
+    AR(1) Gauss-Markov fading step at each device's pathloss-scaled
+    stationary power, plus a fresh per-round availability (duty-cycle)
+    Bernoulli draw.  Pure: all randomness comes from ``key`` (which the
+    round scan derives from the single carried per-round key — the
+    reproducible-under-seed chain).
+    """
+    k_fade, k_avail = jax.random.split(key)
+    scale = config.channel.rayleigh_scale * state.pathloss
+    h_re, h_im = ch.gauss_markov_fading_step(
+        k_fade, state.h_re, state.h_im, config.fleet.fading_rho, scale)
+    available = (jax.random.uniform(k_avail, state.available.shape)
+                 < config.fleet.availability).astype(jnp.float32)
+    return state._replace(h_re=h_re, h_im=h_im, available=available)
+
+
+def fleet_rates(state: FleetState, ch_cfg) -> jax.Array:
+    """Per-device achieved FBL rate (bits/s/Hz) at the current fading."""
+    return ch.fbl_rate(ch.snr(ch_cfg.tx_power_w, state.gain2(),
+                              ch_cfg.noise_w),
+                       ch_cfg.blocklength, ch_cfg.error_prob)
+
+
+def round_cost_j(config: Config, rates: jax.Array, num_params: int,
+                 wire_bits_per_param: float | None = None) -> jax.Array:
+    """Per-device energy cost of participating in one round (N,).
+
+    Local training (eq. 7, identical across devices) plus the uplink
+    transmission at each device's achieved rate (eq. 9), with the radio
+    cut off at the per-round latency limit so outage devices are charged
+    ``tau_limit·P_tx`` instead of an unbounded stall.
+
+    ``wire_bits_per_param`` overrides the ideal d·n uplink payload with
+    the bits a realised collective actually ships (``WirePlan.wire_bits``)
+    for wire-priced energy studies.  Both runtimes default to the paper's
+    d·n: the simulator because its uplink is the star topology, the
+    distributed round DELIBERATELY — a wire-format-dependent debit would
+    fork the battery trajectory (and through eligibility the selection
+    and the model) across collectives, breaking the tested invariant that
+    every wire format produces the bit-identical round.
+    """
+    qcfg = config.quant
+    bits = qcfg.bits if (qcfg.enabled and qcfg.quantize_uplink) else 32
+    e_l = energy_mod.local_training_energy_j(
+        config.energy, num_params, qcfg.bits if qcfg.enabled else 32,
+        config.fl.local_iters)
+    e_u = energy_mod.capped_uplink_energy_j(
+        config.channel, num_params, bits, rates, config.fl.tau_limit_s,
+        wire_bits_per_param=wire_bits_per_param)
+    return (e_l + e_u).astype(jnp.float32)
+
+
+def round_latency_s(config: Config, rates: jax.Array, num_params: int,
+                    macs_per_iter: float) -> jax.Array:
+    """Per-device realized round latency τ_u + τ_comp (radio deadline-capped)."""
+    qcfg = config.quant
+    bits = qcfg.bits if (qcfg.enabled and qcfg.quantize_uplink) else 32
+    tau_u = jnp.minimum(
+        energy_mod.uplink_time_s(config.channel, num_params, bits, rates),
+        config.fl.tau_limit_s)
+    tau_c = energy_mod.compute_time_s(config.energy, macs_per_iter,
+                                      config.fl.local_iters)
+    return tau_u + tau_c
+
+
+def debit_battery(state: FleetState, device_idx: jax.Array,
+                  cost_j: jax.Array) -> "tuple[FleetState, jax.Array]":
+    """Charge the selected devices their round cost (clipped at empty).
+
+    Returns ``(new_state, realized_charge_j)``; the realized vector sums
+    to exactly the fleet's total battery decrease.
+    """
+    battery, charge = energy_mod.battery_debit_j(state.battery_j,
+                                                 device_idx, cost_j)
+    return state._replace(battery_j=battery), charge
+
+
+def advance_cursor(state: FleetState, k: int) -> FleetState:
+    """Move the round_robin pointer past the ``k`` slots just scanned."""
+    n = state.size
+    return state._replace(rr_cursor=jnp.mod(state.rr_cursor + k, n))
+
+
+class FleetRoundInfo(NamedTuple):
+    """Everything one round of fleet evolution decided (all cohort-shaped
+    (k,) except ``charge_j`` which matches the debited slots)."""
+    idx: jax.Array        # selected device ids
+    valid: jax.Array      # filled-slot mask
+    lam: jax.Array        # realized packet successes (valid-masked)
+    rates_sel: jax.Array  # selected devices' achieved FBL rates
+    cost_sel: jax.Array   # selected devices' round energy cost (J)
+    charge_j: jax.Array   # realized battery debit per slot
+
+
+def round_update(state: FleetState, key: jax.Array, config: Config,
+                 num_params: int, k: int,
+                 wire_bits_per_param: float | None = None
+                 ) -> "tuple[FleetState, FleetRoundInfo]":
+    """The ONE per-round fleet state machine both runtimes share:
+    advance channel/availability -> rates -> round cost -> cohort
+    selection -> FBL-tied drop realization -> battery debit -> cursor.
+
+    Pure and O(N): lives inside the simulator's scan body and replicated
+    inside the distributed shard_map (identical inputs give identical
+    selections on every shard).  All randomness derives from ``key``;
+    ``wire_bits_per_param`` prices the uplink at the realised collective's
+    wire (see :func:`round_cost_j`).
+    """
+    # function-level imports: selection/errors import FleetState from here
+    from repro.population import errors as perrors
+    from repro.population import selection as psel
+    k_ch, k_sel, k_drop = jax.random.split(key, 3)
+    state = advance_channel(state, k_ch, config)
+    rates = fleet_rates(state, config.channel)
+    cost = round_cost_j(config, rates, num_params,
+                        wire_bits_per_param=wire_bits_per_param)
+    idx, valid = psel.select_cohort(config.fleet.selection, state, rates,
+                                    k, k_sel, cost)
+    rates_sel = rates[idx]
+    lam = valid * perrors.realize_packet_success(k_drop, rates_sel,
+                                                 config.channel.error_prob)
+    state, charge = debit_battery(state, idx, valid * cost[idx])
+    state = advance_cursor(state, k)
+    return state, FleetRoundInfo(idx=idx, valid=valid, lam=lam,
+                                 rates_sel=rates_sel, cost_sel=cost[idx],
+                                 charge_j=charge)

@@ -1,0 +1,74 @@
+"""Jit-able cohort selection over the full fleet via masked ``top_k``.
+
+Every policy is a per-device SCORE; selection is one
+``lax.top_k(where(eligible, score, -inf), k)`` over the whole fleet —
+O(N) work, no host round-trip, scan- and shard_map-compatible.  Devices
+that are unavailable this round or whose battery cannot cover the round
+cost score -inf and are NEVER selected; when fewer than ``k`` devices are
+eligible the surplus slots come back with ``valid == 0`` and contribute
+nothing (their λ, energy debit and aggregation weight are all masked).
+
+Policies (``FleetConfig.selection`` / ``--selection``):
+
+  uniform       a fresh U[0,1) score per device — uniform random cohort
+                over the eligible set (the paper's sampling, fleet-aware).
+  rate_aware    score = achieved FBL rate — picks the best channels
+                (max-throughput / min-energy-per-bit scheduling).
+  energy_aware  score = remaining battery — picks the fullest batteries
+                (lifetime-maximizing, battery-variance-minimizing).
+  round_robin   score = -(device_idx - cursor mod N) — a deterministic
+                rotating scan from the carried cursor (starvation-free).
+
+The canonical policy tuple lives jax-free in
+``config.base.SELECTION_POLICIES`` for the CLI launchers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import SELECTION_POLICIES
+from repro.population.fleet import FleetState
+
+POLICIES = SELECTION_POLICIES
+
+
+def eligible_mask(state: FleetState, round_cost_j: jax.Array) -> jax.Array:
+    """1.0 where a device may be selected: awake AND able to pay the round."""
+    return ((state.available > 0)
+            & (state.battery_j >= round_cost_j)).astype(jnp.float32)
+
+
+def policy_scores(policy: str, state: FleetState, rates: jax.Array,
+                  key: jax.Array) -> jax.Array:
+    """The per-device score vector the masked top_k ranks (higher wins)."""
+    n = state.size
+    if policy == "uniform":
+        return jax.random.uniform(key, (n,))
+    if policy == "rate_aware":
+        return rates
+    if policy == "energy_aware":
+        return state.battery_j
+    if policy == "round_robin":
+        idx = jnp.arange(n, dtype=jnp.int32)
+        # distance ahead of the cursor; nearest-first => negated for top_k
+        return -jnp.mod(idx - state.rr_cursor, n).astype(jnp.float32)
+    raise ValueError(f"unknown selection policy {policy!r}; "
+                     f"expected one of {POLICIES}")
+
+
+def select_cohort(policy: str, state: FleetState, rates: jax.Array,
+                  k: int, key: jax.Array, round_cost_j: jax.Array
+                  ) -> "tuple[jax.Array, jax.Array]":
+    """Pick the round's cohort: ``(device_idx (k,) int32, valid (k,) f32)``.
+
+    ``valid[j] == 0`` marks a slot that could not be filled (fewer than
+    ``k`` eligible devices) — callers must mask that slot's contribution
+    and energy debit.  Eligible devices always outrank ineligible ones
+    because ineligible scores are -inf.
+    """
+    scores = policy_scores(policy, state, rates, key)
+    masked = jnp.where(eligible_mask(state, round_cost_j) > 0,
+                       scores.astype(jnp.float32), -jnp.inf)
+    top, idx = jax.lax.top_k(masked, k)
+    return idx.astype(jnp.int32), jnp.isfinite(top).astype(jnp.float32)

@@ -582,7 +582,10 @@ def test_pallas_kernels_routed_into_packed_ring_and_rsag():
     with set_mesh(mesh):
         for mode, expected in (("packed", ("quantize_pack", "unpack_dequantize")),
                                ("ring", ("quantize_pack", "repack")),
-                               ("rsag", ("pack_sums", "repack"))):
+                               # rsag's final all-gather stores through the
+                               # FUSED unpack_dequantize (no int32 round-trip)
+                               ("rsag", ("pack_sums", "repack",
+                                         "unpack_dequantize"))):
             outs = {}
             for pallas in (False, True):
                 calls.clear()
@@ -599,6 +602,74 @@ def test_pallas_kernels_routed_into_packed_ring_and_rsag():
                 lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
                 outs[False], outs[True])
             assert max(jax.tree_util.tree_leaves(d)) == 0.0, mode
+    print("OK")
+    """)
+
+
+def test_fleet_round_bit_identical_across_collectives():
+    """With the population layer enabled (fleet.size > 0) the distributed
+    round threads a FleetState through: selection, FBL-tied drops and
+    battery debits must be identical under every quantized wire format, so
+    two threaded rounds end bit-identical across int/packed/ring/rsag/auto
+    — params AND fleet — and the metrics carry the fleet + phase-split
+    telemetry."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.population import fleet as pfleet
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+
+    mesh = make_mesh((2,4), ("data","model"))
+    base = reduced(get_config("olmo-1b"))
+    cfg = dataclasses.replace(
+        base,
+        channel=dataclasses.replace(base.channel, error_prob=0.3),
+        fleet=dataclasses.replace(base.fleet, size=64,
+                                  selection="rate_aware"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
+    fleet0 = pfleet.init_fleet(jax.random.PRNGKey(cfg.fleet.seed), cfg)
+    outs, batts = {}, {}
+    with set_mesh(mesh):
+        for mode in ("int", "packed", "ring", "rsag", "auto"):
+            f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
+            p, fleet = params, fleet0
+            for seed in (2, 3):
+                p, m, fleet = f(p, batch, jax.random.PRNGKey(seed), fleet)
+            outs[mode], batts[mode] = p, fleet.battery_j
+            assert np.isfinite(float(m["loss"]))
+            assert "wire_phase_bits_per_param" in m
+            assert float(m["battery_total_j"]) > 0
+            assert float(m["cohort_energy_j"]) >= 0
+            assert abs(sum(float(v) for v in
+                           m["wire_phase_bits_per_param"].values())
+                       - float(m["wire_bits_per_param"])) < 1e-4
+    for mode in ("packed", "ring", "rsag", "auto"):
+        d = jax.tree_util.tree_map(
+            lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+            outs["int"], outs[mode])
+        assert max(jax.tree_util.tree_leaves(d)) == 0.0, mode
+        assert float(jnp.abs(batts["int"] - batts[mode]).max()) == 0.0, mode
+
+    # the opt-in IPW correction reaches the distributed round too: still
+    # bit-identical across wire formats, and different from the eq.6 run
+    cfg_rw = dataclasses.replace(cfg, fleet=dataclasses.replace(
+        cfg.fleet, error_reweight=True))
+    outs_rw = {}
+    with set_mesh(mesh):
+        for mode in ("int", "ring"):
+            f = jax.jit(make_fl_round(model, cfg_rw, mesh, collective=mode))
+            p, m, _ = f(params, batch, jax.random.PRNGKey(2), fleet0)
+            outs_rw[mode] = p
+            assert np.isfinite(float(m["loss"]))
+    d = jax.tree_util.tree_map(
+        lambda a,b: float(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)).max()),
+        outs_rw["int"], outs_rw["ring"])
+    assert max(jax.tree_util.tree_leaves(d)) == 0.0, "reweight must stay bit-identical"
     print("OK")
     """)
 

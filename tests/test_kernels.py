@@ -121,6 +121,29 @@ def test_unpack_dequantize_kernel_matches_ref(bits, n):
                                   np.asarray(ref.dequantize_ref(codes, bits)))
 
 
+@pytest.mark.parametrize("bits,m", [(2, 3), (4, 2), (8, 4), (8, 16)])
+@pytest.mark.parametrize("n", [17, 4096, 40_000])
+def test_unpack_dequantize_bias_matches_ref(bits, m, n):
+    """The rsag all-gather's fused store: unpack at the final lane with the
+    lane-symmetric bias and dequantize straight to f32 (no int32
+    round-trip), bit-exact against the ref oracle and against
+    dequantize(unpack_codes) for aligned and unaligned sizes."""
+    lane = Q.packed_lane_bits(bits, m)
+    b = Q.lane_bias(lane)
+    g = 2 ** (bits - 1)
+    rng = np.random.default_rng(bits * 31 + n + m)
+    sums = jnp.asarray(rng.integers(-g * m, m * (g - 1) + 1,
+                                    size=n).astype(np.int32))
+    words = Q.pack_codes(sums, bits, lane_bits=lane, bias=b)
+    got = ops.unpack_dequantize(words, bits, n, lane_bits=lane, bias=b)
+    want = ref.unpack_dequantize_ref(words, bits, n, lane_bits=lane, bias=b)
+    assert got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.dequantize_ref(sums, bits)))
+
+
 @pytest.mark.parametrize("bits,sum_of", [(1, 1), (2, 3), (4, 2), (8, 1),
                                          (8, 4), (16, 2)])
 @pytest.mark.parametrize("n", [17, 4096, 40_000])
