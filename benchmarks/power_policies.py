@@ -1,0 +1,231 @@
+"""Power-policy sweep: per-device adaptive uplink power vs the paper's
+fixed scalar.
+
+For fleet sizes {1e3, 1e5} x the four power policies this runs 100
+rounds of the pure population layer (`fleet.round_update` — fading,
+power assignment, selection, FBL-tied drops, battery debit — as ONE
+jitted ``lax.scan``; no model training, so the sweep isolates exactly
+what the PowerPolicy changes) and records into
+``BENCH_power_policies.json``:
+
+* mean per-round UPLINK energy of the selected cohort (J) — the §II-D
+  eq. 9 term the power policy controls (local-training energy is
+  policy-independent and reported separately),
+* mean realized outage rate of the cohort vs the configured q,
+* mean per-round packet survivors and the devices still alive at round
+  100.
+
+The ``fixed`` baseline is seeded from the paper's §III CMA-ES optimum
+(``population.power.calibrate_fixed_power`` — the closed loop from
+``core/optimize.py``); the calibrated (P_tx*, q*) channel operating
+point is shared by every policy so the comparison is apples-to-apples.
+
+The committed JSON is a regression gate (``benchmarks/run.py --check``):
+the inversion-based adaptive policies (channel_inversion, fbl_target)
+must spend NO MORE uplink energy than the fixed baseline at
+equal-or-lower realized outage — re-simulated fresh at 1e3 and checked
+against the committed record at 1e5 (the ISSUE-5 acceptance invariant).
+``lyapunov`` is recorded but not energy-gated: with surplus battery its
+V-weighted drift-plus-penalty deliberately buys rate with energy (it
+backs off only as batteries drain — see tests/test_power.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+from benchmarks.common import emit
+
+SIZES = (1_000, 100_000)
+ROUNDS = 100
+COHORT = 64
+POLICIES = ("fixed", "channel_inversion", "fbl_target", "lyapunov")
+#: adaptive policies the --check gate holds to <= fixed uplink energy
+GATED = ("channel_inversion", "fbl_target")
+OUTAGE_TOL = 0.02
+OUT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_power_policies.json")
+NUM_PARAMS = 421_642  # the paper QNN
+
+
+#: benchmark noise floor (dBm).  At the paper's -100 dBm every adaptive
+#: policy clips to p_min fleet-wide and the gate would pass vacuously
+#: (p_fixed/p_min, not adaptive behavior); at 0 dBm the inversion math
+#: actually bites — assigned powers spread across [p_min, p_max], deep
+#: fades hit the p_max truncation, and outage/energy genuinely separate
+#: the policies (review finding).
+NOISE_PSD_DBM = 0.0
+
+
+def _base_config(size: int):
+    from repro.configs import get_config
+    cfg = get_config("mnist_cnn")
+    return dataclasses.replace(
+        cfg,
+        fl=dataclasses.replace(cfg.fl, devices_per_round=COHORT),
+        channel=dataclasses.replace(cfg.channel,
+                                    noise_psd_dbm=NOISE_PSD_DBM),
+        fleet=dataclasses.replace(cfg.fleet, size=size,
+                                  selection="uniform"))
+
+
+def calibrated_config(size: int, *, p_fixed: float | None = None,
+                      error_prob: float | None = None, max_iters: int = 40):
+    """The shared operating point: CMA-ES-calibrated (P_tx*, q*) unless
+    a committed pair is passed in (the --check path skips the CMA-ES)."""
+    from repro.population import power as ppower
+    cfg = _base_config(size)
+    if p_fixed is None or error_prob is None:
+        cfg = ppower.calibrate_fixed_power(
+            cfg, num_params=NUM_PARAMS,
+            macs_per_iter=cfg.energy.macs_per_iteration,
+            max_iters=max_iters)
+        return cfg
+    return dataclasses.replace(
+        cfg,
+        power=dataclasses.replace(cfg.power, p_fixed=p_fixed),
+        channel=dataclasses.replace(cfg.channel, error_prob=error_prob))
+
+
+def simulate(cfg, rounds: int = ROUNDS) -> dict:
+    """100 rounds of the pure fleet state machine as one jitted scan."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import energy as energy_mod
+    from repro.population import fleet as pfleet
+    from repro.population import power as ppower
+
+    state = pfleet.init_fleet(jax.random.PRNGKey(0), cfg)
+
+    def body(carry, _):
+        state, key = carry
+        key, k = jax.random.split(key)
+        state, info = pfleet.round_update(state, k, cfg, NUM_PARAMS, COHORT)
+        # the same eq. 9 uplink term round_update debits (same bits rule)
+        e_u = energy_mod.capped_uplink_energy_j(
+            cfg.channel, NUM_PARAMS, ppower.uplink_bits(cfg),
+            info.rates_sel, cfg.fl.tau_limit_s, tx_power_w=info.power_sel)
+        n_valid = jnp.maximum(jnp.sum(info.valid), 1.0)
+        tel = {
+            "uplink_j": jnp.sum(info.valid * e_u),
+            "round_j": jnp.sum(info.charge_j),
+            "outage": jnp.sum(info.outage_sel) / n_valid,
+            "survivors": jnp.sum(info.lam),
+            "power_mean_w": jnp.sum(info.valid * info.power_sel) / n_valid,
+        }
+        return (state, key), tel
+
+    run = jax.jit(lambda c: jax.lax.scan(body, c, None, length=rounds))
+    (state, _), tels = run((state, jax.random.PRNGKey(1)))
+    tels = {k: jax.device_get(v) for k, v in tels.items()}
+    alive = int(jax.device_get((state.battery_j > 0).sum()))
+    return {
+        "uplink_energy_j_mean": round(float(tels["uplink_j"].mean()), 8),
+        "round_energy_j_mean": round(float(tels["round_j"].mean()), 6),
+        "outage_rate_mean": round(float(tels["outage"].mean()), 6),
+        "survivors_round_mean": round(float(tels["survivors"].mean()), 2),
+        "power_mean_w": round(float(tels["power_mean_w"].mean()), 6),
+        "alive_at_end": alive,
+    }
+
+
+def _sweep(cfg_for_size, sizes=SIZES, policies=POLICIES) -> dict:
+    entries = {}
+    for size in sizes:
+        per_policy = {}
+        base = cfg_for_size(size)
+        for policy in policies:
+            cfg = dataclasses.replace(
+                base, power=dataclasses.replace(base.power, policy=policy))
+            t0 = time.perf_counter()
+            stats = simulate(cfg)
+            stats["wall_s"] = round(time.perf_counter() - t0, 3)
+            per_policy[policy] = stats
+            emit(f"power_{size}_{policy}",
+                 stats["wall_s"] / ROUNDS * 1e6,
+                 f"uplink_j={stats['uplink_energy_j_mean']};"
+                 f"outage={stats['outage_rate_mean']};"
+                 f"survivors={stats['survivors_round_mean']}")
+        entries[str(size)] = per_policy
+    return entries
+
+
+def run() -> None:
+    cal = calibrated_config(SIZES[0])
+    record = {
+        "arch": "mnist_cnn", "rounds": ROUNDS, "cohort": COHORT,
+        "p_fixed_cmaes_w": cal.power.p_fixed,
+        "error_prob_cmaes": cal.channel.error_prob,
+        "gated_policies": list(GATED),
+        "entries": _sweep(lambda size: calibrated_config(
+            size, p_fixed=cal.power.p_fixed,
+            error_prob=cal.channel.error_prob)),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    emit("power_policies_json", 0.0,
+         f"wrote={os.path.basename(OUT_JSON)};"
+         f"p_fixed={record['p_fixed_cmaes_w']:.4f};"
+         f"q={record['error_prob_cmaes']:.4f}")
+
+
+def _gate(entry: dict, label: str) -> int:
+    """Adaptive <= fixed uplink energy at equal-or-lower outage."""
+    failures = 0
+    fixed = entry["fixed"]
+    for policy in GATED:
+        got = entry[policy]
+        e_ok = (got["uplink_energy_j_mean"]
+                <= fixed["uplink_energy_j_mean"] * (1 + 1e-6))
+        q_ok = (got["outage_rate_mean"]
+                <= fixed["outage_rate_mean"] + OUTAGE_TOL)
+        failures += not (e_ok and q_ok)
+        print(f"  {label} {policy}: uplink "
+              f"{got['uplink_energy_j_mean']:.3e}J vs fixed "
+              f"{fixed['uplink_energy_j_mean']:.3e}J, outage "
+              f"{got['outage_rate_mean']:.4f} vs "
+              f"{fixed['outage_rate_mean']:.4f} "
+              f"[{'ok' if e_ok and q_ok else 'REGRESSED'}]")
+    return failures
+
+
+def check() -> int:
+    """Regression gate for ``run.py --check``: the committed 1e5 record
+    must satisfy adaptive <= fixed at matched outage (the acceptance
+    invariant), and a FRESH 1e3 re-simulation at the committed operating
+    point must reproduce it (no CMA-ES re-run).  Returns failure count."""
+    if not os.path.exists(OUT_JSON):
+        print("power_policies --check: no committed BENCH_power_policies.json")
+        return 1
+    with open(OUT_JSON) as f:
+        committed = json.load(f)
+    failures = 0
+    entry_1e5 = committed["entries"].get(str(SIZES[-1]))
+    if not entry_1e5:
+        print(f"  no committed {SIZES[-1]} entry [REGRESSED]")
+        failures += 1
+    else:
+        failures += _gate(entry_1e5, f"committed {SIZES[-1]}:")
+    fresh = _sweep(lambda size: calibrated_config(
+        size, p_fixed=committed["p_fixed_cmaes_w"],
+        error_prob=committed["error_prob_cmaes"]), sizes=SIZES[:1],
+        policies=("fixed",) + GATED)  # only what _gate reads
+    failures += _gate(fresh[str(SIZES[0])], f"fresh {SIZES[0]}:")
+    return failures
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="gate adaptive-policy uplink energy <= fixed at "
+                         "matched outage (committed 1e5 + fresh 1e3)")
+    args = ap.parse_args()
+    if args.check:
+        n = check()
+        if n:
+            raise SystemExit(f"{n} power_policies gate(s) failed")
+    else:
+        run()

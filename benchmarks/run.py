@@ -25,6 +25,8 @@ REGISTRY = {
                     "benchmarks.collective_modes"),
     "fleet": ("fleet-scale population sweep: {1e3,1e5,1e6} x 4 policies",
               "benchmarks.fleet_scale"),
+    "power": ("power policies: fixed@CMA-ES vs per-device adaptive uplink "
+              "power, {1e3,1e5} fleets", "benchmarks.power_policies"),
     "roofline": ("roofline table from dry-run artifacts",
                  "benchmarks.roofline_report"),
     "ablations": ("non-IID split + Pallas-kernel-in-the-loop ablations",
@@ -45,10 +47,12 @@ def main() -> None:
                          "collectives); also re-times the 1e6-device fleet "
                          "selection+fading step against the committed "
                          "BENCH_fleet_scale.json wall-clock budget and its "
-                         "wire-bit record")
+                         "wire-bit record; also gates the adaptive power "
+                         "policies to <= the fixed baseline's uplink energy "
+                         "at matched outage vs BENCH_power_policies.json")
     args = ap.parse_args()
     if args.check:
-        from benchmarks import collective_modes, fleet_scale
+        from benchmarks import collective_modes, fleet_scale, power_policies
         regressed = collective_modes.check()
         if regressed:
             raise SystemExit(
@@ -61,6 +65,13 @@ def main() -> None:
                 f"{regressed} fleet_scale gate(s) failed vs "
                 f"BENCH_fleet_scale.json")
         print("# --check: fleet step budget + wire OK", file=sys.stderr)
+        regressed = power_policies.check()
+        if regressed:
+            raise SystemExit(
+                f"{regressed} power_policies gate(s) failed vs "
+                f"BENCH_power_policies.json")
+        print("# --check: adaptive power <= fixed at matched outage OK",
+              file=sys.stderr)
         return
     selected = [s for s in args.only.split(",") if s] or list(REGISTRY)
 

@@ -250,8 +250,50 @@ class ConvergenceConfig:
 
 #: cohort selection policies of the population layer (``repro.population``).
 #: Lives here — the one jax-free module — so CLI launchers can build their
-#: ``--selection`` choices before jax initializes.
-SELECTION_POLICIES = ("uniform", "rate_aware", "energy_aware", "round_robin")
+#: ``--selection`` choices before jax initializes.  ``lyapunov`` ranks by the
+#: drift-plus-penalty score of ``population.power`` (rate utility traded
+#: against battery-drift-weighted round energy).
+SELECTION_POLICIES = ("uniform", "rate_aware", "energy_aware", "round_robin",
+                      "lyapunov")
+
+#: per-device uplink power policies (``repro.population.power``).  Jax-free
+#: for the same reason as SELECTION_POLICIES (CLI ``--power-policy`` choices).
+POWER_POLICIES = ("fixed", "channel_inversion", "fbl_target", "lyapunov")
+
+
+@dataclass(frozen=True)
+class PowerConfig:
+    """Per-device adaptive uplink transmit power (``repro.population.power``).
+
+    The paper optimizes ONE scalar P_tx for the whole fleet (§III eq. 20,
+    CMA-ES); this subsystem assigns every device its own ``tx_power_w``
+    each round from its current channel/battery state:
+
+      fixed              every device transmits at ``p_fixed`` (0 → the
+                         ``ChannelConfig.tx_power_w`` scalar).  Seed it from
+                         the CMA-ES optimum with
+                         ``population.power.calibrate_fixed_power``.
+      channel_inversion  truncated channel inversion: the power that hits
+                         ``target_snr_db`` at the device's current gain,
+                         clipped to [p_min, p_max].
+      fbl_target         invert the finite-blocklength rate expression: the
+                         minimum power whose predicted FBL rate (at the
+                         configured ``error_prob``) completes the d·n uplink
+                         inside ``tau_limit_s``, clipped to [p_min, p_max] —
+                         lazy scheduling; a clip at p_max marks predicted
+                         outage.
+      lyapunov           battery-drift-plus-penalty: each device picks the
+                         grid power maximizing V·rate − drift·energy where
+                         drift grows as its battery drains (V = lyapunov_v;
+                         V→∞ recovers max-rate, V→0 min-energy).
+    """
+    policy: str = "fixed"           # one of POWER_POLICIES
+    p_fixed: float = 0.0            # fixed-policy power (0 => channel.tx_power_w)
+    p_min: float = 1e-3             # lowest assignable tx power (W)
+    p_max: float = 2.0              # highest assignable (the CMA-ES box upper)
+    target_snr_db: float = 10.0     # channel_inversion SNR target
+    fbl_rate_margin: float = 1.05   # fbl_target headroom over the deadline rate
+    lyapunov_v: float = 0.2         # drift-plus-penalty utility weight V
 
 
 @dataclass(frozen=True)
@@ -277,6 +319,13 @@ class FleetConfig:
     battery_spread: float = 0.5     # uniform ± fraction around battery_j
     availability: float = 0.9       # per-round duty-cycle probability
     error_reweight: bool = False    # opt-in unbiased 1/(1-q) correction
+    # energy harvesting: every device recovers this much per round (solar /
+    # RF / kinetic), capped at its initial battery capacity — fleets no
+    # longer drain monotonically.  ``harvest_class_scale`` optionally scales
+    # the credit per pathloss class (same indexing as pathloss_classes;
+    # () => 1.0 for every class).
+    harvest_j_per_round: float = 0.0
+    harvest_class_scale: Tuple[float, ...] = ()
     seed: int = 0                   # fleet init PRNG (independent of fl.seed)
 
     @property
@@ -352,6 +401,7 @@ class Config:
     convergence: ConvergenceConfig = field(default_factory=ConvergenceConfig)
     fl: FLConfig = field(default_factory=FLConfig)
     fleet: FleetConfig = field(default_factory=FleetConfig)
+    power: PowerConfig = field(default_factory=PowerConfig)
     mesh: MeshConfig = field(default_factory=MeshConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
 

@@ -39,12 +39,23 @@ def dispersion(snr: jax.Array) -> jax.Array:
 
 
 def fbl_rate(snr: jax.Array, blocklength: jax.Array, error_prob: jax.Array) -> jax.Array:
-    """Achievable rate (bits/s/Hz), clipped at 0 (deep fades -> outage)."""
-    r = capacity(snr) - jnp.sqrt(dispersion(snr) / blocklength) * qfunc_inv(error_prob)
+    """Achievable rate (bits/s/Hz), clipped at 0 (deep fades -> outage).
+
+    Fully vectorized: ``snr`` may be any broadcastable array (e.g. the
+    (N,) per-device SNRs of a fleet at per-device power).  The dispersion
+    is floored inside the sqrt so reverse-mode gradients stay finite in
+    the truncation region (sqrt'(0) = ∞ would otherwise turn the clipped
+    branch's zero cotangent into 0·∞ = NaN at snr → 0 — exactly where
+    power-control policies differentiate through the clip).
+    """
+    v = jnp.maximum(dispersion(snr), 1e-12)
+    r = capacity(snr) - jnp.sqrt(v / blocklength) * qfunc_inv(error_prob)
     return jnp.maximum(r, 0.0)
 
 
 def snr(tx_power_w: jax.Array, channel_gain2: jax.Array, noise_w: jax.Array) -> jax.Array:
+    """ρ = P·|h|²/N₀ — every argument broadcasts (scalar power for the
+    paper's homogeneous fleet, an (N,) vector under per-device policies)."""
     return tx_power_w * channel_gain2 / noise_w
 
 

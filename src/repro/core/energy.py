@@ -29,6 +29,11 @@ def uplink_energy_j(ch_cfg: ChannelConfig, num_params: int, bits: int,
                     wire_bits_per_param: float | None = None) -> jnp.ndarray:
     """eq. 9 — transmission energy at the achieved FBL rate.
 
+    ``tx_power_w`` is honestly per-device: a (N,) vector (the power
+    policy's assignment) broadcasts elementwise against the (N,) rates —
+    each device is charged τ_i·P_i at ITS assigned power; ``None`` falls
+    back to the legacy fixed config scalar.
+
     ``wire_bits_per_param`` overrides the paper's ideal d·n payload with
     the bits a realised collective actually ships (possibly fractional —
     e.g. 10.67 for packed guard lanes, or the int-container width after a
@@ -80,11 +85,14 @@ def capped_uplink_energy_j(ch_cfg: ChannelConfig, num_params: int, bits: int,
     unbounded transmission energy; physically it transmits until the
     per-round latency limit ``tau_cap_s`` and gives up (the packet drops —
     see ``population.errors``), so its energy is capped at
-    ``tau_cap_s · P_tx``.  This is the per-device round cost the fleet
-    battery model debits; ``wire_bits_per_param`` optionally prices the
-    payload at a realised collective's wire bits instead of the ideal d·n
-    (see ``population.fleet.round_cost_j`` for why the distributed round
-    keeps the default).
+    ``tau_cap_s · P_i`` — per device, at ITS assigned power
+    (``tx_power_w`` broadcasts exactly as in :func:`uplink_energy_j`, so
+    an outage device under a per-device policy is charged the deadline
+    at the power the policy actually gave it).  This is the per-device
+    round cost the fleet battery model debits; ``wire_bits_per_param``
+    optionally prices the payload at a realised collective's wire bits
+    instead of the ideal d·n (see ``population.fleet.round_cost_j`` for
+    why the distributed round keeps the default).
     """
     p = ch_cfg.tx_power_w if tx_power_w is None else tx_power_w
     tau = uplink_time_s(ch_cfg, num_params, bits, rate_bps_hz,

@@ -65,13 +65,22 @@ Two runtimes share the same math:
 Both runtimes accept a **fleet** (``config.fleet.size > 0``): the device
 population of ``repro.population`` — per-device pathloss classes,
 Gauss-Markov AR(1) correlated fading carried across rounds, batteries
-debited by the §II-D energy model, availability, jit-able cohort
-selection and FBL-tied packet errors.  The simulator threads the
-``FleetState`` (plus the single split-per-round PRNG key) through its
-``lax.scan`` carry — the whole 10^6-device update stays inside the jitted
-scan; the distributed round threads it through the step signature
-(params, batch, rng, fleet) -> (params, metrics, fleet), replicated, and
-is bit-identical across every collective wire format.
+debited by the §II-D energy model (plus the opt-in harvesting credit),
+availability, jit-able cohort selection and FBL-tied packet errors, and
+PER-DEVICE adaptive uplink power: each round the configured
+``PowerConfig.policy`` (fixed / channel_inversion / fbl_target /
+lyapunov — ``population.power``) assigns the whole fleet a transmit-power
+vector from its current fading/battery state; rates, round costs and
+battery debits price that vector and the round telemetry carries its
+quantiles next to budget-vs-realized energy and outage-vs-target.  The
+simulator threads the ``FleetState`` (plus the single split-per-round
+PRNG key) through its ``lax.scan`` carry — the whole 10^6-device update
+stays inside the jitted scan; the distributed round threads it through
+the step signature (params, batch, rng, fleet) -> (params, metrics,
+fleet), replicated.  The power vector, like the battery debit, is a pure
+function of (state, config) pricing the mode-independent d·n payload, so
+the fleet/power trajectory — and through it the aggregated model — is
+bit-identical across every collective wire format.
 """
 from __future__ import annotations
 
@@ -91,6 +100,7 @@ from repro.core import energy as energy_mod
 from repro.core import quantization as quant
 from repro.population import errors as pop_errors
 from repro.population import fleet as pop_fleet
+from repro.population import power as pop_power
 from repro.population import telemetry as pop_tel
 from repro.utils import compat
 
@@ -202,7 +212,8 @@ class FLSimulator:
         if cfg.fleet.error_reweight:
             new_params = pop_errors.reweighted_aggregate(
                 params, deltas, client_alphas, info.valid, info.lam,
-                cfg.channel.error_prob, rates=info.rates_sel)
+                cfg.channel.error_prob, rates=info.rates_sel,
+                min_rate=pop_power.min_rate(cfg, self.num_params))
         elif cfg.fl.error_aware:
             new_params = agg.error_aware_aggregate(
                 params, deltas, client_alphas * info.valid, info.lam)
@@ -214,7 +225,9 @@ class FLSimulator:
         tel = pop_tel.simulator_round_telemetry(
             loss=losses.mean(), accuracy=accs.mean(), selected=info.idx,
             valid=info.valid, lam=info.lam, battery_j=fleet.battery_j,
-            charge_j=info.charge_j, tau_s=tau)
+            charge_j=info.charge_j, tau_s=tau, power_w=fleet.p_last,
+            outage_sel=info.outage_sel, cost_sel=info.cost_sel,
+            harvest_j=info.harvest_j, error_prob=cfg.channel.error_prob)
         return new_params, fleet, tel
 
     def _fleet_scan_fn(self, eval_fn: Optional[Callable]) -> Callable:
@@ -579,16 +592,20 @@ def make_fl_round(model, config: Config, mesh, *,
         if config.fleet.error_reweight:
             delta_scale = pop_errors.ipw_delta_scale(
                 info.lam, info.valid, info.rates_sel,
-                config.channel.error_prob)
+                config.channel.error_prob,
+                min_rate=pop_power.min_rate(config, num_params))
 
         new_params, mean_loss, survivors = _cohort_update(
             params, batch, _shard_rng(rng), info.lam[shard], delta_scale)
 
         metrics = pop_tel.distributed_metrics(
             plan, loss=mean_loss, survivors=survivors,
-            fleet=pop_tel.fleet_round_metrics(battery_j=fleet.battery_j,
-                                              valid=info.valid,
-                                              charge_j=info.charge_j))
+            fleet=pop_tel.fleet_round_metrics(
+                battery_j=fleet.battery_j, valid=info.valid,
+                charge_j=info.charge_j, power_w=fleet.p_last,
+                outage_sel=info.outage_sel, cost_sel=info.cost_sel,
+                harvest_j=info.harvest_j,
+                error_prob=config.channel.error_prob))
         return new_params, metrics, fleet
 
     P = jax.sharding.PartitionSpec

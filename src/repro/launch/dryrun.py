@@ -30,7 +30,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import SELECTION_POLICIES, Config
+from repro.config.base import POWER_POLICIES, SELECTION_POLICIES, Config
 from repro.configs import (ASSIGNED_ARCHS, for_shape, get_config,
                            supports_shape)
 from repro.configs.shapes import SHAPES, get_shape
@@ -228,6 +228,10 @@ def run(args) -> int:
                     fleet_overrides += (f"fleet.size={args.fleet_size}",)
                 if args.selection:
                     fleet_overrides += (f"fleet.selection={args.selection}",)
+                if args.power_policy:
+                    fleet_overrides += (f"power.policy={args.power_policy}",)
+                if args.power_max:
+                    fleet_overrides += (f"power.p_max={args.power_max}",)
                 try:
                     rec = lower_combo(arch, shape_name, multi,
                                       collective=args.collective,
@@ -271,6 +275,12 @@ def main():
     ap.add_argument("--selection", default=None,
                     choices=list(SELECTION_POLICIES),
                     help="fleet cohort selection policy (fleet.selection)")
+    ap.add_argument("--power-policy", default=None,
+                    choices=list(POWER_POLICIES),
+                    help="per-device uplink power policy (power.policy)")
+    ap.add_argument("--power-max", type=float, default=0.0,
+                    help="cap on assignable per-device tx power in W "
+                         "(power.p_max)")
     ap.add_argument("--suffix", default="")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
     ap.add_argument("--skip-existing", action="store_true")

@@ -20,8 +20,32 @@ point (outage ⇒ certain drop).  The ``FleetState`` threads through the
 step loop; every collective wire format produces the bit-identical model
 under any (fleet, policy) pair.
 
+Per-device power control (``--power-policy`` / ``--power-max``, or the
+``power.*`` overrides): instead of the paper's single scalar P_tx, every
+device is assigned its own uplink transmit power each round by a jit-able
+policy over its current fading/battery state (``repro.population.power``):
+
+  | ``--power-policy``    | per-device power p_i                           |
+  |-----------------------|------------------------------------------------|
+  | ``fixed``             | ``power.p_fixed`` (0 → ``channel.tx_power_w``);|
+  |                       | seed from the §III CMA-ES optimum via          |
+  |                       | ``power.calibrate_fixed_power``                |
+  | ``channel_inversion`` | truncated inversion to ``power.target_snr_db``,|
+  |                       | clipped to [p_min, p_max]                      |
+  | ``fbl_target``        | minimum power whose FBL rate at the configured |
+  |                       | ``error_prob`` finishes the d·n uplink inside  |
+  |                       | ``fl.tau_limit_s`` (lazy scheduling)           |
+  | ``lyapunov``          | battery-drift-plus-penalty grid search         |
+  |                       | (V = ``power.lyapunov_v``); its score is also  |
+  |                       | the ``--selection lyapunov`` cohort policy     |
+
+The assigned powers ride the round metrics (``power_q50_w`` etc. next to
+``outage_rate`` vs ``outage_target`` and budget-vs-realized energy) and
+persist on the checkpointed ``FleetState`` (``p_last``).
+
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
-      --fleet-size 1000000 --selection rate_aware --collective auto \
+      --fleet-size 1000000 --selection lyapunov --power-policy fbl_target \
+      --collective auto \
       model.n_layers=2 train.global_batch=8 train.seq_len=64 --devices 8
 """
 from __future__ import annotations
@@ -30,7 +54,8 @@ import argparse
 import os
 import time
 
-from repro.config.base import COLLECTIVE_CHOICES, SELECTION_POLICIES  # jax-free
+from repro.config.base import (COLLECTIVE_CHOICES, POWER_POLICIES,  # jax-free
+                               SELECTION_POLICIES)
 
 
 def main():
@@ -51,6 +76,13 @@ def main():
                     choices=list(SELECTION_POLICIES),
                     help="fleet cohort selection policy (fleet.selection "
                          "override)")
+    ap.add_argument("--power-policy", default=None,
+                    choices=list(POWER_POLICIES),
+                    help="per-device uplink power policy (power.policy "
+                         "override; default 'fixed' = the paper's scalar)")
+    ap.add_argument("--power-max", type=float, default=0.0,
+                    help="cap on the assignable per-device tx power in W "
+                         "(power.p_max override)")
     ap.add_argument("--steps", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
@@ -83,6 +115,10 @@ def main():
         overrides += (f"fleet.size={args.fleet_size}",)
     if args.selection:
         overrides += (f"fleet.selection={args.selection}",)
+    if args.power_policy:
+        overrides += (f"power.policy={args.power_policy}",)
+    if args.power_max:
+        overrides += (f"power.p_max={args.power_max}",)
     cfg = apply_overrides(get_config(args.arch), overrides)
     model = build_model(cfg)
     n_dev = len(jax.devices())
@@ -125,8 +161,10 @@ def main():
             print(f"restored checkpoint step {start}")
             if fleet is not None and latest_step(fleet_ckpt_dir) is not None:
                 # resume the SAME population: drained batteries, fading
-                # chain and cursor — not a fresh round-0 fleet
-                fleet = restore_checkpoint(fleet_ckpt_dir, fleet)
+                # chain and cursor — not a fresh round-0 fleet (legacy
+                # pre-power-control checkpoints are migrated in place)
+                fleet = pfleet.restore_fleet_checkpoint(fleet_ckpt_dir,
+                                                        fleet)
                 print(f"restored fleet state step "
                       f"{latest_step(fleet_ckpt_dir)}")
         if fleet is not None:
@@ -162,6 +200,9 @@ def main():
                 if "battery_q50_j" in metrics:
                     extra += (f" batt_med={float(metrics['battery_q50_j']):.1f}J"
                               f" E_round={float(metrics['cohort_energy_j']):.2f}J")
+                if "power_q50_w" in metrics:
+                    extra += (f" p_med={float(metrics['power_q50_w']):.3f}W"
+                              f" outage={float(metrics['outage_rate']):.3f}")
                 print(f"step {step:5d} loss={loss:.4f} tok/s={tok_s:,.0f}{extra}")
             if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
                 save_checkpoint(args.checkpoint_dir, step + 1, params)

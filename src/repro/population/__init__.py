@@ -12,20 +12,28 @@ round-trips):
                 pathloss class, Gauss-Markov AR(1) correlated Rayleigh
                 fading, battery energy (J) debited by the §II-D model, and
                 a per-round availability trace.
+  power.py      per-device adaptive uplink power control (the PowerPolicy
+                layer): fixed (CMA-ES-seeded) / channel_inversion /
+                fbl_target / lyapunov assign every device its own
+                ``tx_power_w`` each round from its fading/battery state.
   selection.py  jit-able cohort selection over the full fleet via masked
                 ``top_k``: uniform / rate_aware / energy_aware /
-                round_robin; dead or unavailable devices are never selected.
+                round_robin / lyapunov; dead or unavailable devices are
+                never selected.
   errors.py     per-round packet-error realization tied to the FBL
-                operating point q (outage ⇒ certain drop) and the opt-in
-                unbiased 1/(1-q) reweighting correction.
+                operating point q at the ASSIGNED power (outage ⇒ certain
+                drop) and the opt-in unbiased 1/(1-q) reweighting
+                correction.
   telemetry.py  the ONE place round metrics are assembled: cohort /
-                drops / battery quantiles plus the per-phase
-                ``wire_phase_bits_per_param`` split of the collective.
+                drops / battery + assigned-power quantiles /
+                budget-vs-realized energy / outage-vs-target plus the
+                per-phase ``wire_phase_bits_per_param`` split of the
+                collective.
 
 ``core.fl`` threads a ``FleetState`` through the ``FLSimulator.run_rounds``
 scan carry and through the distributed ``make_fl_round`` (every collective
 wire format runs unchanged under any (fleet, policy) pair).
 """
-from repro.population import errors, fleet, selection, telemetry
+from repro.population import errors, fleet, power, selection, telemetry
 
-__all__ = ["errors", "fleet", "selection", "telemetry"]
+__all__ = ["errors", "fleet", "power", "selection", "telemetry"]

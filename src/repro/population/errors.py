@@ -2,14 +2,21 @@
 
 The seed simulator drew λ_k ~ Bernoulli(1-q) with a FIXED ``error_prob``
 regardless of the channel.  Here the drop probability follows the
-finite-blocklength operating point each device actually runs at:
+finite-blocklength operating point each device actually runs at — the
+``rates`` every function below receives are computed at the device's
+ASSIGNED per-device transmit power (``population.power``), so the power
+policy directly shapes who can be in outage:
 
-* a device whose achieved FBL rate is positive decodes with the target
-  error probability q — the *chosen* operating point of the
-  rate-adaptive FBL scheme (paper §II-D2), exactly the old Bernoulli;
-* a device in OUTAGE (rate clipped to 0 by a deep fade) cannot complete
-  the uplink inside the round deadline — its packet drops with
-  probability 1.
+* a device whose achieved FBL rate clears the deadline-miss threshold
+  (``min_rate``: the rate below which the d·n payload cannot finish
+  inside ``tau_limit_s`` — ``population.power.min_rate``; 0 for callers
+  without a deadline) decodes with the target error probability q — the
+  *chosen* operating point of the rate-adaptive FBL scheme (paper
+  §II-D2), exactly the old Bernoulli;
+* a device in OUTAGE (rate at or below the threshold — a deep fade the
+  assigned, [p_min, p_max]-clipped power cannot lift to the deadline
+  rate) cannot complete the uplink inside the round deadline — its
+  packet drops with probability 1, even when its rate is positive.
 
 With correlated AR(1) fading this couples drops across rounds the way a
 real fleet experiences them (a faded device keeps dropping until the
@@ -45,19 +52,23 @@ PyTree = Any
 EPS = 1e-12
 
 
-def packet_error_probs(rates: jax.Array, error_prob: jax.Array) -> jax.Array:
+def packet_error_probs(rates: jax.Array, error_prob: jax.Array,
+                       min_rate: jax.Array = 0.0) -> jax.Array:
     """Per-device drop probability at the FBL operating point.
 
-    q where the achieved rate supports the uplink; 1.0 in outage
-    (rate <= 0 — the fbl_rate clip of a deep fade).
+    q where the achieved rate supports the uplink; 1.0 in outage — rate
+    at or below ``min_rate``, the deadline-miss threshold (0 keeps the
+    legacy "deep-fade clip only" semantics: rate <= 0).
     """
-    return jnp.where(rates > 0, jnp.float32(error_prob), jnp.float32(1.0))
+    return jnp.where(rates > min_rate, jnp.float32(error_prob),
+                     jnp.float32(1.0))
 
 
 def realize_packet_success(key: jax.Array, rates: jax.Array,
-                           error_prob: jax.Array) -> jax.Array:
+                           error_prob: jax.Array,
+                           min_rate: jax.Array = 0.0) -> jax.Array:
     """λ reliability draws: 1 w.p. 1-q per device, always 0 in outage."""
-    p = packet_error_probs(rates, error_prob)
+    p = packet_error_probs(rates, error_prob, min_rate)
     return (jax.random.uniform(key, rates.shape) >= p).astype(jnp.float32)
 
 
@@ -66,17 +77,21 @@ def inverse_prob_weights(lam: jax.Array, error_prob: jax.Array) -> jax.Array:
     return lam / jnp.maximum(1.0 - jnp.float32(error_prob), EPS)
 
 
-def _reachable(valid: jax.Array, rates: jax.Array | None) -> jax.Array:
-    """Slots whose device can survive at all (valid and not in outage)."""
+def _reachable(valid: jax.Array, rates: jax.Array | None,
+               min_rate: jax.Array = 0.0) -> jax.Array:
+    """Slots whose device can survive at all (valid and not in outage —
+    the same ``min_rate`` deadline threshold as the drop realization, so
+    the IPW expected mass matches the actual survival probabilities)."""
     if rates is None:
         return valid
-    return valid * (rates > 0).astype(jnp.float32)
+    return valid * (rates > min_rate).astype(jnp.float32)
 
 
 def reweighted_aggregate(w: PyTree, deltas: PyTree, alphas: jax.Array,
                          valid: jax.Array, lam: jax.Array,
                          error_prob: jax.Array,
-                         rates: jax.Array | None = None) -> PyTree:
+                         rates: jax.Array | None = None,
+                         min_rate: jax.Array = 0.0) -> PyTree:
     """The opt-in unbiased aggregation: w + Σ α λ Δ / ((1-q)·Σ_reach α).
 
     The denominator is the EXPECTED surviving mass of the selected cohort
@@ -90,7 +105,7 @@ def reweighted_aggregate(w: PyTree, deltas: PyTree, alphas: jax.Array,
     is selected).
     """
     K = lam.shape[0]
-    reach = _reachable(valid, rates)
+    reach = _reachable(valid, rates, min_rate)
     # λ ≡ 0 in outage, so the reach mask only matters in the denominator
     wts = alphas * reach * inverse_prob_weights(lam, error_prob)
     den = jnp.maximum(jnp.sum(alphas * reach), EPS)
@@ -104,7 +119,8 @@ def reweighted_aggregate(w: PyTree, deltas: PyTree, alphas: jax.Array,
 
 def ipw_delta_scale(lam: jax.Array, valid: jax.Array,
                     rates: jax.Array | None,
-                    error_prob: jax.Array) -> jax.Array:
+                    error_prob: jax.Array,
+                    min_rate: jax.Array = 0.0) -> jax.Array:
     """Scalar turning an eq.-6-normalized aggregate into the unbiased IPW
     estimator, for UNIFORM cohort weights (the distributed round's
     α = 1/K): the collective computes Σ λΔ / Σλ; multiplying by
@@ -115,6 +131,6 @@ def ipw_delta_scale(lam: jax.Array, valid: jax.Array,
     :func:`reweighted_aggregate`.  Replicated-computable (no collectives);
     0 when nobody survives, so an all-dropped round stays a no-op.
     """
-    reach = _reachable(valid, rates)
+    reach = _reachable(valid, rates, min_rate)
     den = jnp.maximum((1.0 - jnp.float32(error_prob)) * jnp.sum(reach), EPS)
     return jnp.sum(lam) / den

@@ -19,7 +19,16 @@ two population axes:
 Batteries are debited by the §II-D energy model (local compute + uplink
 at the device's achieved FBL rate, radio capped at the round deadline);
 a device whose battery cannot cover the round cost is ineligible until
-recharged (no recharge model yet — fleets drain monotonically).
+recharged.  An opt-in harvesting model (``FleetConfig.harvest_j_per_round``)
+credits every device per round, capped at its initial capacity, so fleets
+no longer drain monotonically.
+
+Uplink transmit power is PER DEVICE: each round the configured
+``PowerConfig.policy`` (``population.power``) assigns the whole fleet a
+power vector from its current fading/battery state; rates, round costs
+and battery debits all price that assigned vector, and the realized
+powers persist on ``FleetState.p_last`` (so checkpoints round-trip the
+policy's operating point).
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ import jax.numpy as jnp
 from repro.config.base import SELECTION_POLICIES, Config
 from repro.core import channel as ch
 from repro.core import energy as energy_mod
+from repro.population import power as ppower
 
 
 class FleetState(NamedTuple):
@@ -40,6 +50,11 @@ class FleetState(NamedTuple):
     h_im: jax.Array        # complex fading state, imaginary part
     pathloss: jax.Array    # static mean-|h|² multiplier (class gain)
     battery_j: jax.Array   # remaining battery energy (J)
+    capacity_j: jax.Array  # battery capacity (J) — the initial draw; the
+                           # harvesting credit caps here
+    harvest_scale: jax.Array  # per-device harvest multiplier (class-mapped)
+    p_last: jax.Array      # last assigned per-device tx power (W); the
+                           # power policy's round-tripped operating point
     available: jax.Array   # current-round availability {0., 1.}
     rr_cursor: jax.Array   # () int32 — round_robin scan pointer
 
@@ -66,6 +81,7 @@ def init_fleet(key: jax.Array, config: Config) -> FleetState:
         raise ValueError("init_fleet needs fleet.size > 0")
     if fcfg.selection not in SELECTION_POLICIES:
         raise ValueError(f"unknown fleet.selection {fcfg.selection!r}")
+    ppower.validate_config(config.power)
     n = int(fcfg.size)
     k_cls, k_h, k_b = jax.random.split(key, 3)
     classes = jnp.asarray(fcfg.pathloss_classes, jnp.float32)
@@ -73,15 +89,61 @@ def init_fleet(key: jax.Array, config: Config) -> FleetState:
              if fcfg.class_probs else None)
     cls_idx = jax.random.choice(k_cls, classes.shape[0], (n,), p=probs)
     pathloss = classes[cls_idx]
+    if fcfg.harvest_class_scale:
+        if len(fcfg.harvest_class_scale) != len(fcfg.pathloss_classes):
+            raise ValueError("harvest_class_scale must match "
+                             "pathloss_classes length")
+        harvest_scale = jnp.asarray(fcfg.harvest_class_scale,
+                                    jnp.float32)[cls_idx]
+    else:
+        harvest_scale = jnp.ones((n,), jnp.float32)
     scale = config.channel.rayleigh_scale * pathloss
     h_re, h_im = ch.init_rayleigh_state(k_h, (n,), scale)
     spread = fcfg.battery_spread
-    battery = fcfg.battery_j * (
+    battery = (fcfg.battery_j * (
         1.0 + spread * (2.0 * jax.random.uniform(k_b, (n,)) - 1.0))
+    ).astype(jnp.float32)
     return FleetState(h_re=h_re, h_im=h_im, pathloss=pathloss,
-                      battery_j=battery.astype(jnp.float32),
+                      battery_j=battery, capacity_j=battery,
+                      harvest_scale=harvest_scale,
+                      p_last=jnp.zeros((n,), jnp.float32),
                       available=jnp.ones((n,), jnp.float32),
                       rr_cursor=jnp.zeros((), jnp.int32))
+
+
+class _LegacyFleetState(NamedTuple):
+    """FleetState's layout before the power-control refactor added
+    capacity_j / harvest_scale / p_last — pre-PR-5 fleet checkpoints
+    flatten in this field order."""
+    h_re: jax.Array
+    h_im: jax.Array
+    pathloss: jax.Array
+    battery_j: jax.Array
+    available: jax.Array
+    rr_cursor: jax.Array
+
+
+def restore_fleet_checkpoint(directory: str, template: FleetState,
+                             step: "int | None" = None) -> FleetState:
+    """Restore a checkpointed FleetState, migrating pre-power-control
+    checkpoints: a legacy 6-leaf state (no capacity_j / harvest_scale /
+    p_last) is upgraded with capacity = the restored battery level (the
+    best bound available — harvesting can then never over-fill past the
+    resume point), unit harvest scale, and zero p_last (assigned fresh on
+    the next round).  New-format checkpoints round-trip every field."""
+    from repro.checkpoint import restore_checkpoint
+    try:
+        return restore_checkpoint(directory, template, step)
+    except ValueError:
+        legacy = restore_checkpoint(
+            directory,
+            _LegacyFleetState(**{f: getattr(template, f)
+                                 for f in _LegacyFleetState._fields}),
+            step)
+        return template._replace(
+            **legacy._asdict(), capacity_j=legacy.battery_j,
+            harvest_scale=jnp.ones_like(legacy.battery_j),
+            p_last=jnp.zeros_like(legacy.battery_j))
 
 
 def advance_channel(state: FleetState, key: jax.Array,
@@ -103,21 +165,36 @@ def advance_channel(state: FleetState, key: jax.Array,
     return state._replace(h_re=h_re, h_im=h_im, available=available)
 
 
-def fleet_rates(state: FleetState, ch_cfg) -> jax.Array:
-    """Per-device achieved FBL rate (bits/s/Hz) at the current fading."""
-    return ch.fbl_rate(ch.snr(ch_cfg.tx_power_w, state.gain2(),
-                              ch_cfg.noise_w),
+def fleet_rates(state: FleetState, ch_cfg,
+                tx_power_w: jax.Array | None = None) -> jax.Array:
+    """Per-device achieved FBL rate (bits/s/Hz) at the current fading.
+
+    ``tx_power_w`` is the power policy's per-device vector (the round
+    path ALWAYS passes it); ``None`` falls back to the raw legacy
+    ``ChannelConfig`` scalar — NOT the fixed policy's ``p_fixed`` (this
+    function has no ``PowerConfig``; callers wanting the configured
+    policy must pass ``power.assigned_power``'s vector).  The read goes
+    through ``power.fixed_power_w`` so this module never touches
+    ``ChannelConfig.tx_power_w`` directly (the PR-4 bug where a
+    per-device override was silently ignored; guarded by a grep test).
+    """
+    if tx_power_w is None:
+        tx_power_w = ppower.fixed_power_w(None, ch_cfg)
+    return ch.fbl_rate(ch.snr(tx_power_w, state.gain2(), ch_cfg.noise_w),
                        ch_cfg.blocklength, ch_cfg.error_prob)
 
 
 def round_cost_j(config: Config, rates: jax.Array, num_params: int,
+                 tx_power_w: jax.Array | None = None,
                  wire_bits_per_param: float | None = None) -> jax.Array:
     """Per-device energy cost of participating in one round (N,).
 
     Local training (eq. 7, identical across devices) plus the uplink
-    transmission at each device's achieved rate (eq. 9), with the radio
-    cut off at the per-round latency limit so outage devices are charged
-    ``tau_limit·P_tx`` instead of an unbounded stall.
+    transmission at each device's achieved rate (eq. 9) AND its assigned
+    power (``tx_power_w``, the policy's per-device vector; None → the
+    fixed config scalar), with the radio cut off at the per-round latency
+    limit so outage devices are charged ``tau_limit·P_tx`` instead of an
+    unbounded stall.
 
     ``wire_bits_per_param`` overrides the ideal d·n uplink payload with
     the bits a realised collective actually ships (``WirePlan.wire_bits``)
@@ -129,23 +206,26 @@ def round_cost_j(config: Config, rates: jax.Array, num_params: int,
     every wire format produces the bit-identical round.
     """
     qcfg = config.quant
-    bits = qcfg.bits if (qcfg.enabled and qcfg.quantize_uplink) else 32
     e_l = energy_mod.local_training_energy_j(
         config.energy, num_params, qcfg.bits if qcfg.enabled else 32,
         config.fl.local_iters)
     e_u = energy_mod.capped_uplink_energy_j(
-        config.channel, num_params, bits, rates, config.fl.tau_limit_s,
+        config.channel, num_params, ppower.uplink_bits(config), rates,
+        config.fl.tau_limit_s, tx_power_w=tx_power_w,
         wire_bits_per_param=wire_bits_per_param)
     return (e_l + e_u).astype(jnp.float32)
 
 
 def round_latency_s(config: Config, rates: jax.Array, num_params: int,
                     macs_per_iter: float) -> jax.Array:
-    """Per-device realized round latency τ_u + τ_comp (radio deadline-capped)."""
-    qcfg = config.quant
-    bits = qcfg.bits if (qcfg.enabled and qcfg.quantize_uplink) else 32
+    """Per-device realized round latency τ_u + τ_comp (radio deadline-capped).
+
+    Latency depends on the achieved rate only — the assigned power enters
+    through ``rates`` (computed at the policy's vector), not directly.
+    """
     tau_u = jnp.minimum(
-        energy_mod.uplink_time_s(config.channel, num_params, bits, rates),
+        energy_mod.uplink_time_s(config.channel, num_params,
+                                 ppower.uplink_bits(config), rates),
         config.fl.tau_limit_s)
     tau_c = energy_mod.compute_time_s(config.energy, macs_per_iter,
                                       config.fl.local_iters)
@@ -164,6 +244,24 @@ def debit_battery(state: FleetState, device_idx: jax.Array,
     return state._replace(battery_j=battery), charge
 
 
+def credit_harvest(state: FleetState,
+                   config: Config) -> "tuple[FleetState, jax.Array]":
+    """Credit this round's energy harvest, capped at each device's
+    capacity.  Returns ``(new_state, realized_credit_total_j)`` — the
+    realized total is what telemetry reports, so fleet energy increases
+    by EXACTLY the credited amount (the conservation invariant:
+    Δ battery_total = harvested − charged).  A zero ``harvest_j_per_round``
+    is a static no-op (config is trace-time constant)."""
+    h = config.fleet.harvest_j_per_round
+    if h <= 0:
+        return state, jnp.float32(0.0)
+    credit = jnp.minimum(state.capacity_j - state.battery_j,
+                         jnp.float32(h) * state.harvest_scale)
+    credit = jnp.maximum(credit, 0.0)
+    return (state._replace(battery_j=state.battery_j + credit),
+            jnp.sum(credit))
+
+
 def advance_cursor(state: FleetState, k: int) -> FleetState:
     """Move the round_robin pointer past the ``k`` slots just scanned."""
     n = state.size
@@ -172,13 +270,18 @@ def advance_cursor(state: FleetState, k: int) -> FleetState:
 
 class FleetRoundInfo(NamedTuple):
     """Everything one round of fleet evolution decided (all cohort-shaped
-    (k,) except ``charge_j`` which matches the debited slots)."""
+    (k,) except ``charge_j`` which matches the debited slots and the
+    scalar ``harvest_j``)."""
     idx: jax.Array        # selected device ids
     valid: jax.Array      # filled-slot mask
     lam: jax.Array        # realized packet successes (valid-masked)
     rates_sel: jax.Array  # selected devices' achieved FBL rates
     cost_sel: jax.Array   # selected devices' round energy cost (J)
+    power_sel: jax.Array  # selected devices' ASSIGNED tx power (W)
+    outage_sel: jax.Array  # valid slots whose rate misses the deadline
+                           # threshold (power.min_rate) — drop w.p. 1
     charge_j: jax.Array   # realized battery debit per slot
+    harvest_j: jax.Array  # () realized fleet-wide harvest credit (J)
 
 
 def round_update(state: FleetState, key: jax.Array, config: Config,
@@ -186,12 +289,17 @@ def round_update(state: FleetState, key: jax.Array, config: Config,
                  wire_bits_per_param: float | None = None
                  ) -> "tuple[FleetState, FleetRoundInfo]":
     """The ONE per-round fleet state machine both runtimes share:
-    advance channel/availability -> rates -> round cost -> cohort
-    selection -> FBL-tied drop realization -> battery debit -> cursor.
+    advance channel/availability -> assign per-device power
+    (``population.power``) -> rates -> round cost -> cohort selection ->
+    FBL-tied drop realization -> battery debit -> harvest credit ->
+    cursor.
 
     Pure and O(N): lives inside the simulator's scan body and replicated
     inside the distributed shard_map (identical inputs give identical
-    selections on every shard).  All randomness derives from ``key``;
+    selections on every shard).  All randomness derives from ``key``; the
+    power vector is a pure function of (state, config) — like the battery
+    debit it prices the mode-independent d·n payload, so the fleet/power
+    trajectory is bit-identical under every collective wire format.
     ``wire_bits_per_param`` prices the uplink at the realised collective's
     wire (see :func:`round_cost_j`).
     """
@@ -200,16 +308,29 @@ def round_update(state: FleetState, key: jax.Array, config: Config,
     from repro.population import selection as psel
     k_ch, k_sel, k_drop = jax.random.split(key, 3)
     state = advance_channel(state, k_ch, config)
-    rates = fleet_rates(state, config.channel)
-    cost = round_cost_j(config, rates, num_params,
+    power = ppower.assigned_power(config, state.gain2(), state.battery_j,
+                                  state.capacity_j, num_params)
+    state = state._replace(p_last=power)
+    rates = fleet_rates(state, config.channel, power)
+    cost = round_cost_j(config, rates, num_params, tx_power_w=power,
                         wire_bits_per_param=wire_bits_per_param)
     idx, valid = psel.select_cohort(config.fleet.selection, state, rates,
-                                    k, k_sel, cost)
+                                    k, k_sel, cost,
+                                    lyapunov_v=config.power.lyapunov_v)
     rates_sel = rates[idx]
+    # outage = the uplink cannot finish by the deadline at the ASSIGNED
+    # power: rate at or below power.min_rate (subsumes the rate<=0 deep
+    # fade) — the ONE definition drops, IPW reach and telemetry share
+    r_min = jnp.float32(ppower.min_rate(config, num_params))
+    outage_sel = valid * (rates_sel <= r_min).astype(jnp.float32)
     lam = valid * perrors.realize_packet_success(k_drop, rates_sel,
-                                                 config.channel.error_prob)
+                                                 config.channel.error_prob,
+                                                 min_rate=r_min)
     state, charge = debit_battery(state, idx, valid * cost[idx])
+    state, harvested = credit_harvest(state, config)
     state = advance_cursor(state, k)
     return state, FleetRoundInfo(idx=idx, valid=valid, lam=lam,
                                  rates_sel=rates_sel, cost_sel=cost[idx],
-                                 charge_j=charge)
+                                 power_sel=power[idx],
+                                 outage_sel=outage_sel, charge_j=charge,
+                                 harvest_j=harvested)

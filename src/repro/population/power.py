@@ -1,0 +1,263 @@
+"""Per-device adaptive uplink power control (the PowerPolicy layer).
+
+The paper fixes ONE transmit power for the whole fleet and optimizes it
+once on the host (§III eq. 20, CMA-ES over (P_tx, q) in
+``core/optimize.py``).  Real fleets are heterogeneous: a cell-edge device
+at 1/8 the mean gain needs 8x the power for the same SNR while a
+cell-center device wastes most of the fixed scalar.  This module assigns
+every device its own ``tx_power_w`` each round from its CURRENT state —
+pure elementwise jnp over (N,) vectors, so it runs inside the jitted
+round scan and replicated inside ``shard_map`` (identical inputs give
+identical powers on every shard: the power vector, like the battery
+debit, is wire-format-independent, preserving the bit-identity
+invariant across collectives).
+
+Policies (``PowerConfig.policy`` / ``--power-policy``):
+
+  fixed              p_i = ``p_fixed`` (0 → ``ChannelConfig.tx_power_w``)
+                     for every device — the paper's scalar, now seeded
+                     from the CMA-ES optimum via
+                     :func:`calibrate_fixed_power` (closing the loop from
+                     ``core/optimize.py`` into the runtime).
+  channel_inversion  truncated channel inversion: p_i = ρ_t·N₀/|h_i|²
+                     targeting ``target_snr_db``, clipped to
+                     [p_min, p_max] — constant received SNR for every
+                     device the clip does not truncate.
+  fbl_target         lazy scheduling: invert the finite-blocklength rate
+                     expression (``channel.fbl_rate``) for the MINIMUM
+                     SNR whose predicted rate at the configured
+                     ``error_prob`` completes the d·n uplink inside
+                     ``tau_limit_s``, then p_i = ρ*·N₀/|h_i|² clipped to
+                     [p_min, p_max].  Devices the p_max clip cannot lift
+                     to ρ* are in predicted outage — their achieved rate
+                     stays below :func:`min_rate`, the payload cannot
+                     finish by the deadline, and ``population.errors``
+                     drops them w.p. 1; everyone else meets the
+                     configured ``error_prob`` operating point at
+                     minimum energy.
+  lyapunov           battery-drift-plus-penalty: each device picks, from
+                     a fixed log-spaced power grid, the power maximizing
+                     V·rate − drift·energy where drift grows toward 1 as
+                     its battery drains (normalized per device so the
+                     trade-off is scale-free).  V = ``lyapunov_v``: V→∞
+                     recovers max-rate scheduling, V→0 min-energy.  The
+                     same score at the ASSIGNED power is the ``lyapunov``
+                     cohort-selection policy (``population.selection``).
+
+The FBL inversion has no closed form; :func:`required_snr_for_rate` runs
+a fixed-iteration bisection in log-SNR space (jit-able, vectorized, and
+trace-time constant when the target rate is one) over the monotone
+region of the clipped rate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import POWER_POLICIES, ChannelConfig, Config, PowerConfig
+from repro.core import channel as ch
+
+POLICIES = POWER_POLICIES
+
+#: candidate powers evaluated by the lyapunov grid search
+LYAPUNOV_GRID = 16
+#: drift never vanishes entirely — a full battery still prices energy
+DRIFT_FLOOR = 0.05
+_EPS = 1e-30
+
+
+def validate_config(pcfg: PowerConfig) -> None:
+    """Reject degenerate power boxes up front (``init_fleet`` calls this):
+    a non-positive ``p_min`` collapses the lyapunov log-grid to zeros and
+    lets the inversion policies assign 0 W (guaranteed outage), and
+    ``p_min > p_max`` makes ``jnp.clip`` silently return ``p_max``."""
+    if pcfg.policy not in POLICIES:
+        raise ValueError(f"unknown power.policy {pcfg.policy!r}; "
+                         f"expected one of {POLICIES}")
+    if pcfg.p_min <= 0:
+        raise ValueError(f"power.p_min must be > 0, got {pcfg.p_min}")
+    if pcfg.p_min > pcfg.p_max:
+        raise ValueError(f"power.p_min {pcfg.p_min} exceeds "
+                         f"power.p_max {pcfg.p_max}")
+    if pcfg.p_fixed < 0:
+        raise ValueError(f"power.p_fixed must be >= 0, got {pcfg.p_fixed}")
+
+
+def uplink_bits(config: Config) -> int:
+    """The n of the d·n uplink payload (32 when quantization is off)."""
+    qcfg = config.quant
+    return qcfg.bits if (qcfg.enabled and qcfg.quantize_uplink) else 32
+
+
+def fixed_power_w(pcfg: PowerConfig | None,
+                  ch_cfg: ChannelConfig) -> jnp.ndarray:
+    """The fixed-policy scalar: ``p_fixed`` or the legacy config scalar.
+
+    This is the ONE place the population layer reads
+    ``ChannelConfig.tx_power_w`` (grep-guarded in the tests) — every
+    other consumer takes the assigned power vector as an argument.
+    """
+    p = (pcfg.p_fixed if pcfg is not None and pcfg.p_fixed > 0
+         else ch_cfg.tx_power_w)
+    return jnp.float32(p)
+
+
+def channel_inversion_power(pcfg: PowerConfig, ch_cfg: ChannelConfig,
+                            gain2: jax.Array) -> jax.Array:
+    """Truncated inversion: hit ``target_snr_db`` at the current gain."""
+    snr_t = 10.0 ** (pcfg.target_snr_db / 10.0)
+    p = snr_t * ch_cfg.noise_w / jnp.maximum(gain2, _EPS)
+    return jnp.clip(p, pcfg.p_min, pcfg.p_max).astype(jnp.float32)
+
+
+def required_snr_for_rate(rate_target: jax.Array, blocklength: jax.Array,
+                          error_prob: jax.Array, *, iters: int = 60,
+                          lo: float = 1e-9, hi: float = 1e14) -> jax.Array:
+    """The minimum SNR whose FBL rate reaches ``rate_target`` (> 0).
+
+    Bisection in log-SNR space on the clipped ``channel.fbl_rate``
+    (non-decreasing in SNR: zero through the truncation region, then the
+    capacity term dominates).  60 iterations resolve the [1e-9, 1e14]
+    bracket to ~1e-7 relative — far below the fading noise it feeds.
+    Vectorized over ``rate_target``; jit-able (fixed trip count).
+    """
+    lo = jnp.full(jnp.shape(rate_target), jnp.log(lo), jnp.float32)
+    hi = jnp.full(jnp.shape(rate_target), jnp.log(hi), jnp.float32)
+
+    def body(_, bracket):
+        lo, hi = bracket
+        mid = 0.5 * (lo + hi)
+        r = ch.fbl_rate(jnp.exp(mid), blocklength, error_prob)
+        ok = r >= rate_target
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return jnp.exp(hi)
+
+
+def min_rate(config: Config, num_params: int) -> float:
+    """The rate (bits/s/Hz) below which the d·n uplink CANNOT complete
+    inside ``tau_limit_s`` — the deadline-miss threshold: a device whose
+    achieved rate falls under it is in outage (its packet drops w.p. 1,
+    ``population.errors``), regardless of whether the rate is positive."""
+    payload = float(num_params) * uplink_bits(config)
+    return payload / (config.channel.bandwidth_hz * config.fl.tau_limit_s)
+
+
+def deadline_rate(config: Config, num_params: int) -> float:
+    """:func:`min_rate` padded by ``fbl_rate_margin`` — the rate
+    ``fbl_target`` actually aims for, so the assigned operating point
+    never sits exactly on the latency cap."""
+    return min_rate(config, num_params) * config.power.fbl_rate_margin
+
+
+def fbl_target_power(config: Config, gain2: jax.Array,
+                     num_params: int) -> jax.Array:
+    """Minimum power meeting the configured FBL operating point in time."""
+    pcfg, ch_cfg = config.power, config.channel
+    snr_req = required_snr_for_rate(
+        jnp.float32(deadline_rate(config, num_params)),
+        ch_cfg.blocklength, ch_cfg.error_prob)
+    p = snr_req * ch_cfg.noise_w / jnp.maximum(gain2, _EPS)
+    return jnp.clip(p, pcfg.p_min, pcfg.p_max).astype(jnp.float32)
+
+
+def _power_grid(pcfg: PowerConfig) -> jnp.ndarray:
+    """Log-spaced candidate powers [p_min, p_max] (G,), trace-constant."""
+    return jnp.exp(jnp.linspace(jnp.log(pcfg.p_min), jnp.log(pcfg.p_max),
+                                LYAPUNOV_GRID)).astype(jnp.float32)
+
+
+def battery_drift(battery_j: jax.Array, capacity_j: jax.Array) -> jax.Array:
+    """Normalized Lyapunov queue backlog: the energy DEFICIT fraction
+    (capacity − battery)/capacity, floored at DRIFT_FLOOR so a full
+    battery still pays for energy (otherwise the penalty vanishes and
+    the policy degenerates to max-rate)."""
+    frac = (capacity_j - battery_j) / jnp.maximum(capacity_j, _EPS)
+    return jnp.clip(frac, DRIFT_FLOOR, 1.0)
+
+
+def lyapunov_power(config: Config, gain2: jax.Array, battery_j: jax.Array,
+                   capacity_j: jax.Array, num_params: int) -> jax.Array:
+    """Drift-plus-penalty grid search: argmax_p V·r̂(p) − drift·ê(p).
+
+    r̂/ê are the per-device rate and capped uplink energy of each grid
+    candidate, normalized by that device's max over the grid so the
+    trade-off is scale-free (rates in bits/s/Hz vs energies in J differ
+    by orders of magnitude).  O(N·G) elementwise — scan/jit-friendly.
+    """
+    pcfg, ch_cfg = config.power, config.channel
+    payload = jnp.float32(num_params) * uplink_bits(config)
+    p = _power_grid(pcfg)[:, None]                               # (G, 1)
+    rate = ch.fbl_rate(ch.snr(p, gain2[None, :], ch_cfg.noise_w),
+                       ch_cfg.blocklength, ch_cfg.error_prob)    # (G, N)
+    tau = payload / (ch_cfg.bandwidth_hz * jnp.maximum(rate, 1e-12))
+    e = jnp.minimum(tau, config.fl.tau_limit_s) * p              # (G, N)
+    r_hat = rate / jnp.maximum(jnp.max(rate, axis=0), _EPS)
+    e_hat = e / jnp.maximum(jnp.max(e, axis=0), _EPS)
+    drift = battery_drift(battery_j, capacity_j)                 # (N,)
+    score = pcfg.lyapunov_v * r_hat - drift[None, :] * e_hat
+    return _power_grid(pcfg)[jnp.argmax(score, axis=0)]
+
+
+def lyapunov_selection_score(battery_j: jax.Array, capacity_j: jax.Array,
+                             rates: jax.Array, cost_j: jax.Array,
+                             lyapunov_v: float) -> jax.Array:
+    """The ``lyapunov`` cohort-selection score at the ASSIGNED operating
+    point: V·(rate/mean rate) − drift·(cost/mean cost) — rate utility
+    against battery-drift-weighted round energy, normalized by the fleet
+    means so the two terms are commensurate (ROADMAP (c): selection
+    policies mixing rate x battery objectives)."""
+    r_hat = rates / jnp.maximum(jnp.mean(rates), _EPS)
+    c_hat = cost_j / jnp.maximum(jnp.mean(cost_j), _EPS)
+    drift = battery_drift(battery_j, capacity_j)
+    return lyapunov_v * r_hat - drift * c_hat
+
+
+def assigned_power(config: Config, gain2: jax.Array, battery_j: jax.Array,
+                   capacity_j: jax.Array, num_params: int) -> jax.Array:
+    """The round's per-device power vector (N,) under the configured
+    policy.  Pure in (state arrays, config) — no randomness, no
+    collectives — so both runtimes compute the identical vector."""
+    pcfg = config.power
+    policy = pcfg.policy
+    if policy == "fixed":
+        p = fixed_power_w(pcfg, config.channel)
+        return jnp.full(gain2.shape, p, jnp.float32)
+    if policy == "channel_inversion":
+        return channel_inversion_power(pcfg, config.channel, gain2)
+    if policy == "fbl_target":
+        return fbl_target_power(config, gain2, num_params)
+    if policy == "lyapunov":
+        return lyapunov_power(config, gain2, battery_j, capacity_j,
+                              num_params)
+    raise ValueError(f"unknown power.policy {policy!r}; "
+                     f"expected one of {POLICIES}")
+
+
+def calibrate_fixed_power(config: Config, *, num_params: int,
+                          macs_per_iter: float, max_iters: int = 60,
+                          seed: int = 0) -> Config:
+    """Close the loop from ``core/optimize.py`` into the runtime: run the
+    paper's CMA-ES joint (P_tx, q) optimization and return a config whose
+    ``power.p_fixed`` (and ``channel.error_prob``) carry the optimum, so
+    the ``fixed`` policy transmits at the §III eq. 20 operating point
+    instead of the hand-set config scalar."""
+    import dataclasses
+
+    from repro.core import optimize
+
+    obj = optimize.EnergyObjective(config, num_params, macs_per_iter,
+                                   seed=seed)
+    # price the CMA-ES payload at the bits the runtime actually ships
+    # (uplink_bits honors quantize_uplink; quant.bits alone would
+    # calibrate (P_tx, q) against a payload the fleet never transmits)
+    res = optimize.optimize_power_and_error(
+        obj, bits=float(uplink_bits(config)), max_iters=max_iters,
+        seed=seed)
+    p_tx, q = float(res.x_best[0]), float(res.x_best[1])
+    return dataclasses.replace(
+        config,
+        power=dataclasses.replace(config.power, policy="fixed",
+                                  p_fixed=p_tx),
+        channel=dataclasses.replace(config.channel, error_prob=q))

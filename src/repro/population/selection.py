@@ -18,6 +18,11 @@ Policies (``FleetConfig.selection`` / ``--selection``):
                 (lifetime-maximizing, battery-variance-minimizing).
   round_robin   score = -(device_idx - cursor mod N) — a deterministic
                 rotating scan from the carried cursor (starvation-free).
+  lyapunov      score = V·(rate/mean rate) − drift·(cost/mean cost) — the
+                drift-plus-penalty objective of ``population.power``
+                evaluated at the ASSIGNED power: rate utility traded
+                against battery-drift-weighted round energy (ROADMAP (c),
+                mixed rate x battery objectives).
 
 The canonical policy tuple lives jax-free in
 ``config.base.SELECTION_POLICIES`` for the CLI launchers.
@@ -28,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import SELECTION_POLICIES
+from repro.population import power as ppower
 from repro.population.fleet import FleetState
 
 POLICIES = SELECTION_POLICIES
@@ -40,8 +46,14 @@ def eligible_mask(state: FleetState, round_cost_j: jax.Array) -> jax.Array:
 
 
 def policy_scores(policy: str, state: FleetState, rates: jax.Array,
-                  key: jax.Array) -> jax.Array:
-    """The per-device score vector the masked top_k ranks (higher wins)."""
+                  key: jax.Array, round_cost_j: jax.Array | None = None,
+                  lyapunov_v: float = 0.2) -> jax.Array:
+    """The per-device score vector the masked top_k ranks (higher wins).
+
+    ``round_cost_j``/``lyapunov_v`` feed the ``lyapunov`` score only
+    (the round's per-device energy cost at the assigned power and the
+    ``PowerConfig.lyapunov_v`` trade-off weight).
+    """
     n = state.size
     if policy == "uniform":
         return jax.random.uniform(key, (n,))
@@ -53,12 +65,18 @@ def policy_scores(policy: str, state: FleetState, rates: jax.Array,
         idx = jnp.arange(n, dtype=jnp.int32)
         # distance ahead of the cursor; nearest-first => negated for top_k
         return -jnp.mod(idx - state.rr_cursor, n).astype(jnp.float32)
+    if policy == "lyapunov":
+        cost = (round_cost_j if round_cost_j is not None
+                else jnp.zeros_like(rates))
+        return ppower.lyapunov_selection_score(
+            state.battery_j, state.capacity_j, rates, cost, lyapunov_v)
     raise ValueError(f"unknown selection policy {policy!r}; "
                      f"expected one of {POLICIES}")
 
 
 def select_cohort(policy: str, state: FleetState, rates: jax.Array,
-                  k: int, key: jax.Array, round_cost_j: jax.Array
+                  k: int, key: jax.Array, round_cost_j: jax.Array,
+                  lyapunov_v: float = 0.2
                   ) -> "tuple[jax.Array, jax.Array]":
     """Pick the round's cohort: ``(device_idx (k,) int32, valid (k,) f32)``.
 
@@ -67,7 +85,8 @@ def select_cohort(policy: str, state: FleetState, rates: jax.Array,
     and energy debit.  Eligible devices always outrank ineligible ones
     because ineligible scores are -inf.
     """
-    scores = policy_scores(policy, state, rates, key)
+    scores = policy_scores(policy, state, rates, key, round_cost_j,
+                           lyapunov_v)
     masked = jnp.where(eligible_mask(state, round_cost_j) > 0,
                        scores.astype(jnp.float32), -jnp.inf)
     top, idx = jax.lax.top_k(masked, k)

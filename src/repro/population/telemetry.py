@@ -64,9 +64,11 @@ def distributed_metrics(plan: "agg.WirePlan", *, loss: jax.Array,
     return m
 
 
-FLEET_METRIC_KEYS = ("cohort_energy_j", "selected_valid",
+FLEET_METRIC_KEYS = ("cohort_energy_j", "energy_budget_j", "selected_valid",
                      "battery_total_j", "battery_q10_j", "battery_q50_j",
-                     "battery_q90_j")
+                     "battery_q90_j", "power_q10_w", "power_q50_w",
+                     "power_q90_w", "outage_rate", "outage_target",
+                     "harvested_j")
 
 
 def distributed_metrics_structure(plan: "agg.WirePlan",
@@ -85,22 +87,45 @@ def distributed_metrics_structure(plan: "agg.WirePlan",
 
 
 def fleet_round_metrics(*, battery_j: jax.Array, valid: jax.Array,
-                        charge_j: jax.Array) -> Dict[str, jax.Array]:
-    """The fleet extras of one round (scalars; shared by both runtimes)."""
+                        charge_j: jax.Array, power_w: jax.Array,
+                        outage_sel: jax.Array, cost_sel: jax.Array,
+                        harvest_j: jax.Array,
+                        error_prob: float) -> Dict[str, jax.Array]:
+    """The fleet extras of one round (scalars; shared by both runtimes).
+
+    Power-policy accounting rides here: assigned-power quantiles over the
+    whole fleet (``power_w`` = the policy's (N,) vector), the round's
+    energy BUDGET (Σ assigned cohort cost) next to the REALIZED debit
+    (``cohort_energy_j`` — lower when batteries clip at empty), the
+    realized cohort outage rate (``outage_sel`` — the deadline-miss mask
+    ``fleet.round_update`` decided, the same one the drop realization
+    uses) against the configured FBL target, and the realized harvesting
+    credit.
+    """
     q = jnp.percentile(battery_j, jnp.asarray(BATTERY_QUANTILES))
+    pq = jnp.percentile(power_w, jnp.asarray(BATTERY_QUANTILES))
+    n_valid = jnp.sum(valid)
+    outage = jnp.sum(outage_sel) / jnp.maximum(n_valid, 1.0)
     return {
         "cohort_energy_j": jnp.sum(charge_j),
-        "selected_valid": jnp.sum(valid),
+        "energy_budget_j": jnp.sum(valid * cost_sel),
+        "selected_valid": n_valid,
         "battery_total_j": jnp.sum(battery_j),
         "battery_q10_j": q[0], "battery_q50_j": q[1], "battery_q90_j": q[2],
+        "power_q10_w": pq[0], "power_q50_w": pq[1], "power_q90_w": pq[2],
+        "outage_rate": outage,
+        "outage_target": jnp.float32(error_prob),
+        "harvested_j": harvest_j,
     }
 
 
 def simulator_round_telemetry(*, loss: jax.Array, accuracy: jax.Array,
                               selected: jax.Array, valid: jax.Array,
                               lam: jax.Array, battery_j: jax.Array,
-                              charge_j: jax.Array, tau_s: jax.Array
-                              ) -> Dict[str, jax.Array]:
+                              charge_j: jax.Array, tau_s: jax.Array,
+                              power_w: jax.Array, outage_sel: jax.Array,
+                              cost_sel: jax.Array, harvest_j: jax.Array,
+                              error_prob: float) -> Dict[str, jax.Array]:
     """One round of fleet-simulator telemetry (stacked by the scan)."""
     tel = {
         "loss": loss, "accuracy": accuracy,
@@ -111,14 +136,19 @@ def simulator_round_telemetry(*, loss: jax.Array, accuracy: jax.Array,
         "tau_s": tau_s,
     }
     tel.update(fleet_round_metrics(battery_j=battery_j, valid=valid,
-                                   charge_j=charge_j))
+                                   charge_j=charge_j, power_w=power_w,
+                                   outage_sel=outage_sel, cost_sel=cost_sel,
+                                   harvest_j=harvest_j,
+                                   error_prob=error_prob))
     return tel
 
 
 #: stacked-telemetry keys expanded to python floats in the history dicts
 _SCALAR_KEYS = ("loss", "survivors", "drops", "tau_s", "cohort_energy_j",
-                "selected_valid", "battery_total_j", "battery_q10_j",
-                "battery_q50_j", "battery_q90_j")
+                "energy_budget_j", "selected_valid", "battery_total_j",
+                "battery_q10_j", "battery_q50_j", "battery_q90_j",
+                "power_q10_w", "power_q50_w", "power_q90_w", "outage_rate",
+                "outage_target", "harvested_j")
 
 
 def expand_history(stacked: Dict[str, jax.Array], rounds: int,

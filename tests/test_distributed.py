@@ -607,12 +607,13 @@ def test_pallas_kernels_routed_into_packed_ring_and_rsag():
 
 
 def test_fleet_round_bit_identical_across_collectives():
-    """With the population layer enabled (fleet.size > 0) the distributed
-    round threads a FleetState through: selection, FBL-tied drops and
-    battery debits must be identical under every quantized wire format, so
-    two threaded rounds end bit-identical across int/packed/ring/rsag/auto
-    — params AND fleet — and the metrics carry the fleet + phase-split
-    telemetry."""
+    """With the population layer enabled (fleet.size > 0) AND an adaptive
+    per-device power policy, the distributed round threads a FleetState
+    through: power assignment, selection, FBL-tied drops and battery
+    debits must be identical under every quantized wire format, so two
+    threaded rounds end bit-identical across int/packed/ring/rsag/auto —
+    params, batteries AND the assigned power vector — and the metrics
+    carry the fleet + power + phase-split telemetry."""
     run_py("""
     import dataclasses, jax, jax.numpy as jnp, numpy as np
     from repro.configs import get_config, reduced
@@ -627,13 +628,15 @@ def test_fleet_round_bit_identical_across_collectives():
     cfg = dataclasses.replace(
         base,
         channel=dataclasses.replace(base.channel, error_prob=0.3),
+        power=dataclasses.replace(base.power, policy="fbl_target"),
         fleet=dataclasses.replace(base.fleet, size=64,
-                                  selection="rate_aware"))
+                                  selection="rate_aware",
+                                  harvest_j_per_round=0.05))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = token_batch(jax.random.PRNGKey(1), 12, 32, cfg.model.vocab_size)
     fleet0 = pfleet.init_fleet(jax.random.PRNGKey(cfg.fleet.seed), cfg)
-    outs, batts = {}, {}
+    outs, batts, pows = {}, {}, {}
     with set_mesh(mesh):
         for mode in ("int", "packed", "ring", "rsag", "auto"):
             f = jax.jit(make_fl_round(model, cfg, mesh, collective=mode))
@@ -641,10 +644,17 @@ def test_fleet_round_bit_identical_across_collectives():
             for seed in (2, 3):
                 p, m, fleet = f(p, batch, jax.random.PRNGKey(seed), fleet)
             outs[mode], batts[mode] = p, fleet.battery_j
+            pows[mode] = fleet.p_last
             assert np.isfinite(float(m["loss"]))
             assert "wire_phase_bits_per_param" in m
             assert float(m["battery_total_j"]) > 0
             assert float(m["cohort_energy_j"]) >= 0
+            assert float(m["power_q50_w"]) >= cfg.power.p_min
+            assert float(m["outage_target"]) == np.float32(0.3)
+            assert 0.0 <= float(m["outage_rate"]) <= 1.0
+            assert float(m["harvested_j"]) >= 0.0
+            assert (float(m["energy_budget_j"])
+                    >= float(m["cohort_energy_j"]) - 1e-5)
             assert abs(sum(float(v) for v in
                            m["wire_phase_bits_per_param"].values())
                        - float(m["wire_bits_per_param"])) < 1e-4
@@ -654,6 +664,7 @@ def test_fleet_round_bit_identical_across_collectives():
             outs["int"], outs[mode])
         assert max(jax.tree_util.tree_leaves(d)) == 0.0, mode
         assert float(jnp.abs(batts["int"] - batts[mode]).max()) == 0.0, mode
+        assert float(jnp.abs(pows["int"] - pows[mode]).max()) == 0.0, mode
 
     # the opt-in IPW correction reaches the distributed round too: still
     # bit-identical across wire formats, and different from the eq.6 run

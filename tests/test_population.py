@@ -264,18 +264,25 @@ def test_ipw_delta_scale_matches_reweighted_aggregate():
 # ---------------------------------------------------------------------------
 
 def test_battery_conservation_over_rounds():
-    """Total fleet energy decreases by EXACTLY the sum of the charged round
-    energies reported in the telemetry (the realized-debit invariant)."""
-    model, sim = _fleet_sim(size=100, policy="energy_aware")
-    before = np.asarray(sim.fleet_state.battery_j, np.float64)
-    params = model.init(jax.random.PRNGKey(1))
-    _, hist = sim.run_rounds(params, 5, jax.random.PRNGKey(2))
-    after = np.asarray(sim.fleet_state.battery_j, np.float64)
-    charged = sum(h["cohort_energy_j"] for h in hist)
-    np.testing.assert_allclose(np.sum(before - after), charged,
-                               rtol=1e-5, atol=1e-4)
-    assert charged > 0
-    assert np.all(after >= 0)
+    """Total fleet energy moves by EXACTLY Σ harvested − Σ charged as
+    reported in the telemetry (the realized-debit/credit invariant) —
+    with harvesting off (the legacy monotone drain) and on."""
+    for harvest in (0.0, 0.15):
+        model, sim = _fleet_sim(size=100, policy="energy_aware",
+                                fleet={"harvest_j_per_round": harvest})
+        before = np.asarray(sim.fleet_state.battery_j, np.float64)
+        params = model.init(jax.random.PRNGKey(1))
+        _, hist = sim.run_rounds(params, 5, jax.random.PRNGKey(2))
+        after = np.asarray(sim.fleet_state.battery_j, np.float64)
+        charged = sum(h["cohort_energy_j"] for h in hist)
+        harvested = sum(h["harvested_j"] for h in hist)
+        np.testing.assert_allclose(np.sum(before - after),
+                                   charged - harvested,
+                                   rtol=1e-5, atol=1e-4)
+        assert charged > 0
+        assert (harvested > 0) == (harvest > 0)
+        assert np.all(after >= 0)
+        assert np.all(after <= np.asarray(sim.fleet_state.capacity_j) + 1e-5)
 
 
 def test_battery_debit_clips_at_empty():
@@ -307,6 +314,12 @@ def test_fleet_run_rounds_end_to_end_and_reproducible():
             assert np.isfinite(h["loss"]) and np.isfinite(h["accuracy"])
             assert 0 <= h["survivors"] <= 4
             assert h["battery_q10_j"] <= h["battery_q50_j"] <= h["battery_q90_j"]
+            assert h["power_q10_w"] <= h["power_q50_w"] <= h["power_q90_w"]
+            assert h["power_q50_w"] > 0
+            assert h["energy_budget_j"] >= h["cohort_energy_j"] - 1e-5
+            assert 0.0 <= h["outage_rate"] <= 1.0
+            assert h["outage_target"] == np.float32(0.01)
+            assert h["harvested_j"] == 0.0      # harvesting off by default
             assert all(0 <= d < 300 for d in h["selected"])
             assert h["energy_j"] > 0 and h["tau_s"] > 0
     d = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()),

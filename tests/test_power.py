@@ -1,0 +1,393 @@
+"""PowerPolicy-layer tests: per-device adaptive uplink power control
+(`repro/population/power.py`), its threading through the fleet round,
+the harvesting credit, and the no-direct-config-scalar-read guard.
+
+Single-device, tier-1 (the distributed power bit-identity across the
+five collectives lives in test_distributed.py).
+"""
+import ast
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.config.base import POWER_POLICIES
+from repro.configs import get_config
+from repro.core import channel as ch
+from repro.population import fleet as pfleet
+from repro.population import power as ppower
+from repro.population import selection as psel
+
+N_PARAMS = 421_642  # the paper QNN
+
+
+def _cfg(size=256, policy="fixed", *, power=None, channel=None, fleet=None,
+         seed=0):
+    cfg = get_config("mnist_cnn")
+    cfg = dataclasses.replace(
+        cfg,
+        power=dataclasses.replace(cfg.power, policy=policy, **(power or {})),
+        channel=dataclasses.replace(cfg.channel, **(channel or {})),
+        fleet=dataclasses.replace(cfg.fleet, size=size, **(fleet or {})))
+    return cfg, pfleet.init_fleet(jax.random.PRNGKey(seed), cfg)
+
+
+def _power(cfg, st):
+    return ppower.assigned_power(cfg, st.gain2(), st.battery_j,
+                                 st.capacity_j, N_PARAMS)
+
+
+# ---------------------------------------------------------------------------
+# registry / fixed policy
+# ---------------------------------------------------------------------------
+
+def test_policy_registry_consistent():
+    assert ppower.POLICIES == POWER_POLICIES
+    cfg, st = _cfg()
+    bad = dataclasses.replace(cfg, power=dataclasses.replace(cfg.power,
+                                                             policy="bogus"))
+    with pytest.raises(ValueError):
+        _power(bad, st)
+    with pytest.raises(ValueError):
+        pfleet.init_fleet(jax.random.PRNGKey(0), bad)  # checked at init too
+
+
+@pytest.mark.parametrize("field,value", [
+    ("p_min", 0.0), ("p_min", -1.0), ("p_min", 3.0), ("p_fixed", -0.5)])
+def test_degenerate_power_box_rejected(field, value):
+    """p_min <= 0 (zero-power assignments, collapsed lyapunov grid),
+    p_min > p_max (clip silently returns p_max) and negative p_fixed are
+    config errors, caught at fleet init."""
+    cfg, _ = _cfg()
+    bad = dataclasses.replace(cfg, power=dataclasses.replace(
+        cfg.power, **{field: value}))
+    with pytest.raises(ValueError):
+        pfleet.init_fleet(jax.random.PRNGKey(0), bad)
+
+
+def test_fixed_policy_scalar_and_p_fixed_override():
+    cfg, st = _cfg(policy="fixed")
+    p = _power(cfg, st)
+    assert p.shape == (cfg.fleet.size,)
+    np.testing.assert_allclose(np.asarray(p), cfg.channel.tx_power_w)
+    cfg2 = dataclasses.replace(cfg, power=dataclasses.replace(
+        cfg.power, p_fixed=0.7))
+    np.testing.assert_allclose(np.asarray(_power(cfg2, st)), 0.7)
+
+
+def test_calibrate_fixed_power_closes_the_cmaes_loop():
+    """calibrate_fixed_power runs the paper's §III CMA-ES and lands the
+    optimum in power.p_fixed / channel.error_prob — inside the paper box —
+    so the runtime 'fixed' policy transmits at the optimized point."""
+    cfg, st = _cfg(policy="fixed")
+    out = ppower.calibrate_fixed_power(
+        cfg, num_params=N_PARAMS,
+        macs_per_iter=cfg.energy.macs_per_iteration, max_iters=3)
+    assert out.power.policy == "fixed"
+    assert 0.1 <= out.power.p_fixed <= 2.0
+    assert 0.01 <= out.channel.error_prob <= 0.99
+    np.testing.assert_allclose(np.asarray(_power(out, st)),
+                               out.power.p_fixed)
+
+
+# ---------------------------------------------------------------------------
+# channel inversion / fbl_target
+# ---------------------------------------------------------------------------
+
+def test_channel_inversion_hits_target_snr_within_clip():
+    """Unclipped devices land exactly on target_snr_db; devices whose
+    inversion power exceeds the box are clipped to its edges."""
+    cfg, st = _cfg(policy="channel_inversion",
+                   power={"target_snr_db": 3.0},
+                   channel={"noise_psd_dbm": 20.0})  # noise high enough to bite
+    p = np.asarray(_power(cfg, st))
+    snr = np.asarray(ch.snr(jnp.asarray(p), st.gain2(), cfg.channel.noise_w))
+    target = 10.0 ** (3.0 / 10.0)
+    inner = (p > cfg.power.p_min * 1.0001) & (p < cfg.power.p_max * 0.9999)
+    assert inner.any() and (~inner).any()  # the clip truncates SOME devices
+    np.testing.assert_allclose(snr[inner], target, rtol=1e-4)
+    assert np.all(snr[p <= cfg.power.p_min * 1.0001] >= target - 1e-4)
+    assert np.all(snr[p >= cfg.power.p_max * 0.9999] <= target + 1e-4)
+
+
+def test_fbl_target_is_minimal_deadline_meeting_power():
+    """Unclipped fbl_target devices achieve exactly the deadline rate (x
+    margin) — and 10% less power would miss it (minimality)."""
+    cfg, st = _cfg(policy="fbl_target", channel={"noise_psd_dbm": 25.0})
+    p = _power(cfg, st)
+    rates = pfleet.fleet_rates(st, cfg.channel, p)
+    r_min = ppower.deadline_rate(cfg, N_PARAMS)
+    pn = np.asarray(p)
+    inner = (pn > cfg.power.p_min * 1.0001) & (pn < cfg.power.p_max * 0.9999)
+    assert inner.any()
+    np.testing.assert_allclose(np.asarray(rates)[inner], r_min, rtol=1e-3)
+    under = pfleet.fleet_rates(st, cfg.channel, p * 0.9)
+    assert np.all(np.asarray(under)[inner] < r_min)
+    # devices clipped at p_max are the PREDICTED outage set
+    assert np.all(np.asarray(rates)[pn >= cfg.power.p_max * 0.9999] < r_min)
+
+
+@pytest.mark.parametrize("policy", ["channel_inversion", "fbl_target"])
+def test_realized_outage_meets_configured_target_mc(policy):
+    """MC over AR(1) fading: with a generous power box the adaptive
+    policies keep every device out of the truncation region, so the
+    realized drop rate stays at the CONFIGURED error_prob (tolerance =
+    MC noise) — the operating-point guarantee of the tentpole."""
+    q = 0.05
+    cfg, st = _cfg(512, policy,
+                   power={"target_snr_db": 6.0, "p_max": 1e6},
+                   channel={"noise_psd_dbm": 20.0, "error_prob": q})
+    r_min = ppower.min_rate(cfg, N_PARAMS)
+    drops, n = 0.0, 0
+    key = jax.random.PRNGKey(7)
+    for t in range(20):
+        key, k_ch, k_drop = jax.random.split(key, 3)
+        st = pfleet.advance_channel(st, k_ch, cfg)
+        p = _power(cfg, st)
+        rates = pfleet.fleet_rates(st, cfg.channel, p)
+        # nobody truncated under the deadline-miss threshold
+        assert float(jnp.min(rates)) > r_min
+        from repro.population import errors as perrors
+        lam = perrors.realize_packet_success(k_drop, rates, q,
+                                             min_rate=r_min)
+        drops += float(jnp.sum(1.0 - lam))
+        n += rates.shape[0]
+    realized = drops / n
+    assert realized <= q + 3.0 * np.sqrt(q * (1 - q) / n), realized
+
+
+def test_tight_power_box_realizes_truncation_outage():
+    """With p_max clamped low, deep-faded devices CANNOT be lifted to the
+    deadline rate: their rate misses the min_rate threshold and they drop
+    w.p. 1 — the realized outage exceeds the configured q (the truncation
+    region the docs promise)."""
+    q = 0.01
+    cfg, st = _cfg(512, "fbl_target",
+                   power={"p_max": 1e-4, "p_min": 1e-5},
+                   channel={"noise_psd_dbm": 25.0, "error_prob": q})
+    p = _power(cfg, st)
+    rates = pfleet.fleet_rates(st, cfg.channel, p)
+    r_min = ppower.min_rate(cfg, N_PARAMS)
+    outage = float(jnp.mean((rates <= r_min).astype(jnp.float32)))
+    assert outage > q, outage
+
+
+def test_deadline_miss_drops_even_at_positive_rate():
+    """A device whose positive rate still cannot finish the d·n payload
+    by tau_limit (rate <= min_rate) must drop w.p. 1 and be counted as
+    outage — the p_max-clip band fbl_target creates (review finding):
+    positive-rate deadline misses may not silently aggregate."""
+    from repro.population import errors as perrors
+    cfg, st = _cfg(64, "fbl_target")
+    r_min = ppower.min_rate(cfg, N_PARAMS)
+    rates = jnp.asarray([0.0, 0.5 * r_min, 2.0 * r_min], jnp.float32)
+    probs = perrors.packet_error_probs(rates, 0.1, min_rate=r_min)
+    np.testing.assert_allclose(np.asarray(probs), [1.0, 1.0, 0.1])
+    for seed in range(10):
+        lam = perrors.realize_packet_success(jax.random.PRNGKey(seed),
+                                             rates, 0.1, min_rate=r_min)
+        assert float(lam[0]) == 0.0 and float(lam[1]) == 0.0
+    # and round_update's outage mask flags the same band: force every
+    # device into the sub-deadline regime via a tiny p_max
+    tight, st2 = _cfg(64, "fbl_target",
+                      power={"p_max": 1e-15, "p_min": 1e-16})
+    st3, info = pfleet.round_update(st2, jax.random.PRNGKey(0), tight,
+                                    N_PARAMS, 8)
+    assert float(jnp.sum(info.outage_sel)) == float(jnp.sum(info.valid))
+    assert float(jnp.sum(info.lam)) == 0.0  # all deadline misses drop
+
+
+# ---------------------------------------------------------------------------
+# lyapunov power + selection
+# ---------------------------------------------------------------------------
+
+def test_lyapunov_backs_off_as_batteries_drain():
+    """Drift-plus-penalty: a drained fleet is assigned strictly less
+    power (and strictly less round energy) than a full one — and less
+    uplink energy than the fixed-scalar baseline."""
+    cfg, st = _cfg(256, "lyapunov")
+    full = _power(cfg, st)
+    drained_state = st._replace(battery_j=st.capacity_j * 0.02)
+    drained = _power(cfg, drained_state)
+    assert float(jnp.max(drained)) < float(jnp.min(full))
+
+    fixed_cfg = dataclasses.replace(cfg, power=dataclasses.replace(
+        cfg.power, policy="fixed"))
+    for c, s, p in ((cfg, drained_state, drained),
+                    (fixed_cfg, drained_state, _power(fixed_cfg,
+                                                      drained_state))):
+        rates = pfleet.fleet_rates(s, c.channel, p)
+        cost = pfleet.round_cost_j(c, rates, N_PARAMS, tx_power_w=p)
+        if c is cfg:
+            drained_cost = float(jnp.sum(cost))
+        else:
+            fixed_cost = float(jnp.sum(cost))
+    assert drained_cost < fixed_cost
+
+
+def test_lyapunov_selection_prefers_full_fast_devices():
+    """The lyapunov cohort score ranks a full-battery good-channel device
+    above a drained bad-channel one, and select_cohort accepts the
+    policy (ROADMAP (c))."""
+    cfg, st = _cfg(32, "lyapunov")
+    battery = np.full(32, 40.0, np.float32)
+    battery[:16] = 1.0                      # drained half
+    st = st._replace(battery_j=jnp.asarray(battery))
+    rates = np.full(32, 1.0, np.float32)
+    rates[:16] = 0.2                        # ...with bad channels too
+    rates = jnp.asarray(rates)
+    cost = jnp.full((32,), 0.5, jnp.float32)
+    scores = psel.policy_scores("lyapunov", st, rates, jax.random.PRNGKey(0),
+                                cost, 0.2)
+    assert float(scores[16:].min()) > float(scores[:16].max())
+    idx, valid = psel.select_cohort("lyapunov", st, rates, 8,
+                                    jax.random.PRNGKey(0), cost)
+    assert float(valid.sum()) == 8
+    assert set(np.asarray(idx).tolist()) <= set(range(16, 32))
+
+
+# ---------------------------------------------------------------------------
+# gradient safety / vector semantics (the tentpole's channel contract)
+# ---------------------------------------------------------------------------
+
+def test_snr_fbl_rate_gradient_safe_at_zero_gain():
+    """Reverse-mode through the truncation region (gain2 -> 0) must stay
+    finite: the sqrt(dispersion) floor keeps the clipped branch's zero
+    cotangent from becoming 0·inf = NaN."""
+    g_p = jax.grad(lambda p: ch.fbl_rate(ch.snr(p, jnp.float32(0.0), 1e-13),
+                                         1000, 0.01))(jnp.float32(0.1))
+    assert np.isfinite(float(g_p))
+    g_g = jax.grad(lambda g2: jnp.sum(ch.fbl_rate(ch.snr(0.1, g2, 1e-13),
+                                                  1000, 0.01)))(
+        jnp.zeros((4,), jnp.float32))
+    assert np.all(np.isfinite(np.asarray(g_g)))
+    # and the value itself is the outage clip
+    assert float(ch.fbl_rate(jnp.float32(0.0), 1000, 0.01)) == 0.0
+
+
+def test_snr_fbl_rate_vector_semantics_match_scalar():
+    """(N,) power against (N,) gains is exactly the per-device scalar
+    evaluation — the broadcast contract every policy relies on."""
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.uniform(0.01, 1.0, 16).astype(np.float32))
+    g2 = jnp.asarray(rng.exponential(size=16).astype(np.float32))
+    vec = ch.fbl_rate(ch.snr(p, g2, 1e-13), 1000, 0.01)
+    for i in range(16):
+        one = ch.fbl_rate(ch.snr(p[i], g2[i], 1e-13), 1000, 0.01)
+        np.testing.assert_allclose(float(vec[i]), float(one), rtol=1e-6)
+
+
+def test_required_snr_inversion_roundtrip():
+    targets = jnp.asarray([0.05, 0.5, 5.0, 20.0], jnp.float32)
+    s = ppower.required_snr_for_rate(targets, 1000, 0.01)
+    back = ch.fbl_rate(s, 1000, 0.01)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(targets),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# round integration: assignment, harvest, checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_round_update_assigns_power_and_conserves_with_harvest():
+    """One fleet round under an adaptive policy: p_last carries the
+    assigned vector, info.power_sel is its cohort slice, and the battery
+    total moves by EXACTLY harvested − charged (exact conservation with
+    the recharge model)."""
+    cfg, st = _cfg(128, "fbl_target",
+                   fleet={"harvest_j_per_round": 0.2,
+                          "harvest_class_scale": (1.0, 0.5, 0.25, 0.0)})
+    before = np.asarray(st.battery_j, np.float64)
+    st2, info = pfleet.round_update(st, jax.random.PRNGKey(3), cfg,
+                                    N_PARAMS, 8)
+    assert st2.p_last.shape == (128,)
+    assert float(jnp.min(st2.p_last)) >= cfg.power.p_min
+    assert float(jnp.max(st2.p_last)) <= cfg.power.p_max
+    np.testing.assert_allclose(np.asarray(info.power_sel),
+                               np.asarray(st2.p_last[info.idx]))
+    after = np.asarray(st2.battery_j, np.float64)
+    delta = float(np.sum(after - before))
+    np.testing.assert_allclose(delta,
+                               float(info.harvest_j)
+                               - float(jnp.sum(info.charge_j)),
+                               rtol=1e-5, atol=1e-4)
+    assert float(info.harvest_j) > 0
+    assert np.all(after <= np.asarray(st2.capacity_j) + 1e-5)
+
+
+def test_harvest_recovers_a_drained_fleet():
+    """With harvesting on, a drained fleet's total battery RISES between
+    rounds (fleets no longer drain monotonically — ROADMAP (a))."""
+    cfg, st = _cfg(64, "fixed", fleet={"harvest_j_per_round": 1.0})
+    st = st._replace(battery_j=st.capacity_j * 0.1)
+    totals = [float(st.battery_j.sum())]
+    key = jax.random.PRNGKey(0)
+    for t in range(3):
+        key, k = jax.random.split(key)
+        st, info = pfleet.round_update(st, k, cfg, N_PARAMS, 4)
+        totals.append(float(st.battery_j.sum()))
+    # 64 J/round harvested vs ~4 selected * ~0.4 J cost: strictly rising
+    assert all(b > a for a, b in zip(totals, totals[1:])), totals
+
+
+def test_fleet_state_checkpoint_roundtrips_power_state(tmp_path):
+    cfg, st = _cfg(32, "lyapunov")
+    st, _ = pfleet.round_update(st, jax.random.PRNGKey(1), cfg, N_PARAMS, 4)
+    save_checkpoint(str(tmp_path), 7, st)
+    restored = pfleet.restore_fleet_checkpoint(str(tmp_path), st)
+    assert isinstance(restored, pfleet.FleetState)
+    for name in pfleet.FleetState._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(restored, name)),
+                                      np.asarray(getattr(st, name)), name)
+    assert float(jnp.max(restored.p_last)) > 0  # the assigned powers rode
+
+
+def test_legacy_fleet_checkpoint_migrates(tmp_path):
+    """A pre-power-control fleet checkpoint (6-leaf FleetState without
+    capacity_j/harvest_scale/p_last) restores through the migration path:
+    legacy fields byte-identical, capacity := the restored battery level,
+    unit harvest scale, zero p_last."""
+    cfg, st = _cfg(32, "fixed")
+    st, _ = pfleet.round_update(st, jax.random.PRNGKey(1), cfg, N_PARAMS, 4)
+    legacy = pfleet._LegacyFleetState(
+        **{f: getattr(st, f) for f in pfleet._LegacyFleetState._fields})
+    save_checkpoint(str(tmp_path), 3, legacy)
+    restored = pfleet.restore_fleet_checkpoint(str(tmp_path), st)
+    assert isinstance(restored, pfleet.FleetState)
+    for name in pfleet._LegacyFleetState._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(restored, name)),
+                                      np.asarray(getattr(st, name)), name)
+    np.testing.assert_array_equal(np.asarray(restored.capacity_j),
+                                  np.asarray(st.battery_j))
+    np.testing.assert_array_equal(np.asarray(restored.harvest_scale), 1.0)
+    np.testing.assert_array_equal(np.asarray(restored.p_last), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# the grep guard (satellite: nobody reads the config scalar directly)
+# ---------------------------------------------------------------------------
+
+def test_population_layer_never_reads_tx_power_scalar_directly():
+    """AST-grep over repro/population: the ONLY attribute read of
+    ``tx_power_w`` lives in power.fixed_power_w (the documented fixed
+    fallback).  Every other module must take the assigned power vector as
+    an argument — the PR-4 fleet_rates bug can't regress silently."""
+    import repro.population as pop
+    pkg_dir = os.path.dirname(pop.__file__)
+    offenders = {}
+    for fname in sorted(os.listdir(pkg_dir)):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(pkg_dir, fname)) as f:
+            tree = ast.parse(f.read())
+        reads = [node.lineno for node in ast.walk(tree)
+                 if isinstance(node, ast.Attribute)
+                 and node.attr == "tx_power_w"]
+        if reads:
+            offenders[fname] = reads
+    assert set(offenders) <= {"power.py"}, offenders
+    assert len(offenders.get("power.py", [])) == 1, offenders
