@@ -1,17 +1,32 @@
-"""Benchmark utilities: timing + CSV emission (one row per measurement)."""
+"""Benchmark utilities: timing + CSV emission (one row per measurement).
+
+``time_stats`` is THE timing harness every benchmark shares
+(collective_modes, fleet_scale, kernels_micro): warmup calls first so
+compilation never lands in a sample, every sample fenced with
+``block_until_ready`` (jax dispatch is async — unfenced timings measure
+enqueue, not execution), and median + inter-quartile range over the
+samples so one scheduler hiccup cannot move a committed baseline.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
-def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall-time per call in microseconds (after warmup)."""
-    for _ in range(warmup):
+def time_stats(fn: Callable, *args, warmup: int = 2,
+               iters: int = 9) -> Dict[str, float]:
+    """Wall-time stats per call in microseconds (compile excluded).
+
+    Returns ``{"median_us", "iqr_us", "iters"}`` — the median is the
+    number baselines gate on; the IQR rides along as the noise floor so a
+    regression report can say whether a diff is outside run-to-run jitter.
+    """
+    r = None
+    for _ in range(warmup):  # warmup=0 is allowed when the caller compiled
         r = fn(*args)
     _block(r)
     times = []
@@ -19,9 +34,17 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
         t0 = time.perf_counter()
         r = fn(*args)
         _block(r)
-        times.append(time.perf_counter() - t0)
+        times.append((time.perf_counter() - t0) * 1e6)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    q = len(times) // 4
+    return {"median_us": times[len(times) // 2],
+            "iqr_us": times[-1 - q] - times[q],
+            "iters": float(iters)}
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (after warmup)."""
+    return time_stats(fn, *args, warmup=warmup, iters=iters)["median_us"]
 
 
 def _block(x):

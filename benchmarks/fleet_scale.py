@@ -28,9 +28,8 @@ import argparse
 import dataclasses
 import json
 import os
-import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_stats
 
 SIZES = (1_000, 100_000, 1_000_000)
 ROUNDS = 3
@@ -68,10 +67,9 @@ def _time_run_rounds(sim, params, rounds: int = ROUNDS):
     import jax
     p, hist = sim.run_rounds(params, rounds, jax.random.PRNGKey(2))
     jax.block_until_ready(jax.tree_util.tree_leaves(p))
-    t0 = time.perf_counter()
-    p, hist = sim.run_rounds(params, rounds, jax.random.PRNGKey(3))
-    jax.block_until_ready(jax.tree_util.tree_leaves(p))
-    return (time.perf_counter() - t0) / rounds, hist
+    st = time_stats(sim.run_rounds, params, rounds, jax.random.PRNGKey(3),
+                    warmup=0, iters=1)
+    return st["median_us"] / 1e6 / rounds, hist
 
 
 def measure_fleet_step(size: int, policy: str = "rate_aware",
@@ -96,14 +94,8 @@ def measure_fleet_step(size: int, policy: str = "rate_aware",
 
     state, idx, _ = step(state, jax.random.PRNGKey(1))   # compile
     jax.block_until_ready(idx)
-    times = []
-    for i in range(iters):
-        t0 = time.perf_counter()
-        state, idx, _ = step(state, jax.random.PRNGKey(2 + i))
-        jax.block_until_ready(idx)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+    st = time_stats(step, state, jax.random.PRNGKey(2), warmup=0, iters=iters)
+    return st["median_us"] / 1e6
 
 
 def _wire_record(cfg) -> dict:

@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2,fig4] [--fast]
-  PYTHONPATH=src python -m benchmarks.run --check   # wire-byte regression gate
+  PYTHONPATH=src python -m benchmarks.run --check   # regression gates
+  PYTHONPATH=src python -m benchmarks.run --update-baselines [--mesh 16x16]
 """
 from __future__ import annotations
 
@@ -49,16 +50,46 @@ def main() -> None:
                          "BENCH_fleet_scale.json wall-clock budget and its "
                          "wire-bit record; also gates the adaptive power "
                          "policies to <= the fixed baseline's uplink energy "
-                         "at matched outage vs BENCH_power_policies.json")
+                         "at matched outage vs BENCH_power_policies.json; "
+                         "also gates the Pallas wire kernels' speedups and "
+                         "the collective wall-clock schedule wins (pipelined "
+                         "<= sequential on the hop modes) vs their committed "
+                         "baselines")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="re-measure and REWRITE the committed baselines the "
+                         "gates compare against (collective bytes + "
+                         "wall-clock for --mesh, kernel micro speedups) — "
+                         "run after an intentional perf change, then commit "
+                         "the refreshed BENCH_*.json")
+    ap.add_argument("--mesh", default="2x4",
+                    help="mesh entry for --update-baselines (2x4 or 16x16)")
     args = ap.parse_args()
+    if args.update_baselines:
+        from benchmarks import collective_modes, kernels_micro
+        print("name,us_per_call,derived")
+        collective_modes.run(args.mesh)
+        kernels_micro.run()
+        print("# --update-baselines: refreshed BENCH_collective_modes.json "
+              f"({args.mesh}) + BENCH_kernels_micro.json — commit them",
+              file=sys.stderr)
+        return
     if args.check:
-        from benchmarks import collective_modes, fleet_scale, power_policies
+        from benchmarks import (collective_modes, fleet_scale, kernels_micro,
+                                power_policies)
         regressed = collective_modes.check()
         if regressed:
             raise SystemExit(
                 f"{regressed} collective mode(s) regressed vs "
                 f"BENCH_collective_modes.json")
-        print("# --check: collective wire bytes OK", file=sys.stderr)
+        print("# --check: collective wire bytes + wall-clock schedules OK",
+              file=sys.stderr)
+        regressed = kernels_micro.check()
+        if regressed:
+            raise SystemExit(
+                f"{regressed} kernel microbenchmark(s) regressed vs "
+                f"BENCH_kernels_micro.json")
+        print("# --check: Pallas kernel speedups within margin OK",
+              file=sys.stderr)
         regressed = fleet_scale.check()
         if regressed:
             raise SystemExit(

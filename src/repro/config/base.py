@@ -200,6 +200,13 @@ class QuantConfig:
     #   "auto"   — byte-minimal concrete mode for (bits, cohort axis sizes),
     #              resolved at trace time (aggregation.resolve_auto)
     wire_format: str = "f32"
+    # double-buffered hop schedule for the ring / rsag all-gather scans: the
+    # ppermute of hop h+1 is issued before hop h's repack/accumulate, and the
+    # quantize->pack->chunk front-end fuses into one Pallas megakernel under
+    # use_pallas.  Bit-identical to the sequential schedule (same hops, same
+    # order of accumulation) — False restores the PR-7 sequential/unfused
+    # path for A/B wall-clock comparison (benchmarks/collective_modes.py).
+    pipeline_hops: bool = True
 
     @property
     def enabled(self) -> bool:

@@ -74,8 +74,31 @@ telemetry/energy charge the bytes really sent (per phase via
 the hot transforms run through the fused Pallas kernels in
 ``repro.kernels.pack`` (interpret mode on CPU), bit-exact with the
 pure-jnp path: quantize_pack/unpack_dequantize in the packed psum,
-quantize_pack + the mid-hop ``repack`` accumulate in the ring, and
-``pack_sums`` + ``repack`` (lane-bias variants) in the rsag phases.
+the ``quantize_pack_chunk`` megakernel front + the mid-hop ``repack``
+accumulate in the ring, and the megakernel + ``pack_sums`` + ``repack``
+(lane-bias variants) in the rsag phases.
+
+``QuantConfig.pipeline_hops`` (default True) double-buffers the hop
+loops: the ring scan and the rsag all-gather issue hop h+1's
+``lax.ppermute`` before hop h's repack/accumulate lands (see the schedule
+diagram on :func:`_reduce_ring`), and the quantize→pack→chunk front-end
+fuses into ONE ``quantize_pack_chunk`` pass under ``use_pallas``.  Same
+hops, same accumulation order — bit-identical to the sequential
+schedule; False restores the sequential/unfused path for A/B timing.
+
+Measured wall-clock per aggregate (d = 421 642, bits = 8, CPU interpret;
+``benchmarks/BENCH_collective_modes.json`` — TRENDS portable, absolute
+µs machine-specific; gated by ``benchmarks/run.py --check``):
+
+  mode    wire bits/param      wall-clock pipelined vs sequential
+          K=2      K=16        K=2 (auto=ring)    K=16 (auto=packed)
+  packed  10.67    16.0        ~25 ms (0.94x, band) ~269 ms (0.98x, band)
+  ring     8.0    120.0        ~21 ms (1.64x)     ~1188 ms (1.02x)
+  rsag     9.33    28.5        ~19 ms (1.52x)      ~200 ms (1.18x)
+
+The hop modes win from the fused front-end (3 passes → 1 at K=2) plus
+the overlapped schedule; packed is hop-free, so the knob must not move
+it (the --check invariance band asserts exactly that).
 """
 from __future__ import annotations
 
@@ -421,18 +444,47 @@ def _reduce_packed(plan: WirePlan, xs, keys, n: int) -> jax.Array:
 def _reduce_ring(plan: WirePlan, xs, keys, n: int) -> jax.Array:
     """native-width ppermute ring: the full packed vector circles the
     cohort, each hop accumulating into an int32 register tree; multi-axis
-    cohorts run nested rings re-packed at the sum width between levels."""
+    cohorts run nested rings re-packed at the sum width between levels.
+
+    Hop schedule (``qcfg.pipeline_hops``, the PR-8 default)::
+
+        sequential (False)            pipelined / double-buffered (True)
+        ------------------            ----------------------------------
+        for h in 1..K-1:              b1 = ppermute(buf)         # prime
+          b = ppermute(b)             for h in 1..K-2:   # one lax.scan
+          acc += unpack(b)              b_next = ppermute(b)  # hop h+1 ...
+                                        acc += unpack(b)      # ... overlaps
+                                        b = b_next            #     hop h
+                                      acc += unpack(b)       # trailing
+
+    Both orders accumulate ppermute^h(buf) for h = 1..K-1 — bit-identical;
+    the pipelined form issues the NEXT hop's ppermute before the current
+    hop's Pallas repack so the wire transfer and the accumulate overlap on
+    hardware with async collectives.  Under ``use_pallas`` the pipelined
+    path also fuses the quantize->pack front-end into the
+    ``quantize_pack_chunk`` megakernel, emitting the wire buffer AND the
+    own-code register tree in one pass (the separate repack-init pass of
+    the sequential path disappears)."""
     qcfg = plan.quant
     bits = qcfg.bits
     if qcfg.use_pallas:
         from repro.kernels import ops as kops
         xcat = jnp.concatenate([x.reshape(-1) for x in xs])
-        buf = kops.quantize_pack(xcat, None, bits, clip=qcfg.clip,
-                                 lane_bits=bits, stochastic=qcfg.stochastic,
-                                 u=_flat_noise(xs, keys))
-        # own codes = exact unpack of the freshly packed buffer
-        acc = kops.repack(buf, jnp.zeros((n,), jnp.int32), bits, n,
-                          lane_bits=bits, sum_of=1)
+        if qcfg.pipeline_hops:
+            # fused front-end: buf and acc in ONE megakernel pass
+            words, chunks = kops.quantize_pack_chunk(
+                xcat, None, bits, clip=qcfg.clip, lane_bits=bits,
+                stochastic=qcfg.stochastic, num_chunks=1,
+                u=_flat_noise(xs, keys))
+            buf, acc = words[0], chunks[0]
+        else:
+            buf = kops.quantize_pack(xcat, None, bits, clip=qcfg.clip,
+                                     lane_bits=bits,
+                                     stochastic=qcfg.stochastic,
+                                     u=_flat_noise(xs, keys))
+            # own codes = exact unpack of the freshly packed buffer
+            acc = kops.repack(buf, jnp.zeros((n,), jnp.int32), bits, n,
+                              lane_bits=bits, sum_of=1)
     else:
         acc = _flat_codes(plan, xs, keys)
         buf = quant.pack_codes(acc, bits, lane_bits=bits)
@@ -450,24 +502,42 @@ def _reduce_ring(plan: WirePlan, xs, keys, n: int) -> jax.Array:
                 buf = quant.pack_codes(acc, bits, lane_bits=lane, sum_of=m)
         perm = [(j, (j + 1) % K) for j in range(K)]
 
-        def hop(carry, _, *, axis=axis, lane=lane, m=m):
-            b, a = carry
-            b = jax.lax.ppermute(b, axis, perm)
+        def accum(b, a, *, lane=lane, m=m):
             if qcfg.use_pallas:
                 from repro.kernels import ops as kops
-                a = kops.repack(b, a, bits, n, lane_bits=lane, sum_of=m)
-            else:
-                a = a + quant.unpack_codes(b, bits, n, lane_bits=lane,
-                                           sum_of=m)
-            return (b, a), None
+                return kops.repack(b, a, bits, n, lane_bits=lane, sum_of=m)
+            return a + quant.unpack_codes(b, bits, n, lane_bits=lane,
+                                          sum_of=m)
 
-        (buf, acc), _ = jax.lax.scan(hop, (buf, acc), None, length=K - 1)
+        if qcfg.pipeline_hops:
+            b = jax.lax.ppermute(buf, axis, perm)         # prime hop 1
+
+            def hop_pipe(carry, _, *, axis=axis, accum=accum):
+                b, a = carry
+                b_next = jax.lax.ppermute(b, axis, perm)  # issue hop h+1 ...
+                a = accum(b, a)                           # ... while h lands
+                return (b_next, a), None
+
+            (b, acc), _ = jax.lax.scan(hop_pipe, (b, acc), None,
+                                       length=K - 2)
+            acc = accum(b, acc)                           # trailing hop K-1
+        else:
+            def hop(carry, _, *, axis=axis, accum=accum):
+                b, a = carry
+                b = jax.lax.ppermute(b, axis, perm)
+                a = accum(b, a)
+                return (b, a), None
+
+            (buf, acc), _ = jax.lax.scan(hop, (buf, acc), None,
+                                         length=K - 1)
         m *= K
     return quant.dequantize_codes(acc, bits, clip=qcfg.clip)
 
 
 def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
-                unit: int, n: int, *, final: bool = False) -> jax.Array:
+                unit: int, n: int, *, final: bool = False,
+                front: Tuple[jax.Array, jax.Array] | None = None
+                ) -> jax.Array:
     """One reduce-scatter + all-gather level over cohort axis ``axis``.
 
     ``codes`` holds flat partial sums of ``unit`` codes; returns flat sums
@@ -480,6 +550,21 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
     static pack/unpack constants and run as ONE ``lax.scan`` — the traced
     collective count stays O(log K) instead of O(K).
 
+    ``front`` (level 0 under ``use_pallas`` + ``pipeline_hops``) is the
+    ``quantize_pack_chunk`` megakernel's (packed words (K, Wc), chunks
+    (K, C)) pair: the chunk split AND hop 1's outgoing payload come
+    pre-computed in one fused pass, replacing both the per-leaf quantize
+    passes and the first ``pack_sums`` (hop 1 is always its own equal-lane
+    group at unit=1 — lane(h=2) = lane(h=1)+1).  ``codes`` is ignored then.
+
+    Hop schedules (``qcfg.pipeline_hops``): the reduce-scatter is
+    inherently SEQUENTIAL — hop h+1's payload is the pack of hop h's
+    accumulate, a true data dependency — so only its front-end fuses.  The
+    all-gather forwards a finished buffer unchanged, so it double-buffers
+    exactly like the ring: the ppermute of hop t+1 is issued before the
+    chunk store of hop t (prime / scan over t=1..K-2 / trailing store),
+    same stores in the same order — bit-identical to the sequential scan.
+
     ``final`` marks the LAST level: its all-gather chunks are the finished
     code sums, so the store dequantizes straight out of the wire words
     into the f32 output (the fused ``unpack_dequantize`` scatter variant
@@ -490,7 +575,10 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
     qcfg = plan.quant
     bits = qcfg.bits
     C = -(-n // K)
-    chunks = jnp.pad(codes, (0, K * C - n)).reshape(K, C)
+    if front is not None:
+        front_words, chunks = front
+    else:
+        chunks = jnp.pad(codes, (0, K * C - n)).reshape(K, C)
     idx = jax.lax.axis_index(axis)
     perm = [(j, (j + 1) % K) for j in range(K)]
 
@@ -519,6 +607,8 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
         return unpack_add_fn(recv, chunk_at((idx - h) % K), lane)
 
     # ---- reduce-scatter: hops grouped by (equal) lane width --------------
+    # (sequential by construction: hop h+1 ships the PACK of hop h's
+    # accumulate — only the front-end fuses, via ``front``)
     groups: List[Tuple[int, List[int]]] = []
     for h in range(1, K):
         lane = quant.packed_lane_bits(bits, unit * h)
@@ -527,6 +617,14 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
         else:
             groups.append((lane, [h]))
     carry = chunk_at(idx)
+    if front is not None:
+        # hop 1's payload is the megakernel's pre-packed own chunk
+        lane1 = groups[0][0]
+        payload = jax.lax.dynamic_slice(
+            front_words, (idx, 0), (1, front_words.shape[1]))[0]
+        recv = jax.lax.ppermute(payload, axis, perm)
+        carry = unpack_add_fn(recv, chunk_at((idx - 1) % K), lane1)
+        groups = groups[1:]
     for lane, hs in groups:
         if len(hs) == 1:
             carry = hop(carry, hs[0], lane)
@@ -558,6 +656,22 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
         out = jax.lax.dynamic_update_slice(out, own[None],
                                            ((idx + 1) % K, 0))
 
+        if qcfg.pipeline_hops:
+            b = jax.lax.ppermute(buf, axis, perm)       # prime hop 1
+
+            def gather_f32_pipe(state, t):
+                b, o = state
+                b_next = jax.lax.ppermute(b, axis, perm)  # issue hop t+1
+                o = jax.lax.dynamic_update_slice(o, unpack_store(b)[None],
+                                                 ((idx + 1 - t) % K, 0))
+                return (b_next, o), None
+
+            (b, out), _ = jax.lax.scan(gather_f32_pipe, (b, out),
+                                       jnp.arange(1, K - 1))
+            out = jax.lax.dynamic_update_slice(            # trailing store
+                out, unpack_store(b)[None], ((idx + 2 - K) % K, 0))
+            return out.reshape(-1)[:n]
+
         def gather_f32(state, t):
             b, o = state
             b = jax.lax.ppermute(b, axis, perm)
@@ -571,11 +685,30 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
     out = jnp.zeros((K, C), jnp.int32)
     out = jax.lax.dynamic_update_slice(out, carry[None], ((idx + 1) % K, 0))
 
+    def unpack_chunk(b):
+        return quant.unpack_codes(b, bits, C, lane_bits=lane_k, bias=bias_k)
+
+    if qcfg.pipeline_hops:
+        b = jax.lax.ppermute(buf, axis, perm)           # prime hop 1
+
+        def gather_pipe(state, t):
+            b, o = state
+            b_next = jax.lax.ppermute(b, axis, perm)      # issue hop t+1
+            o = jax.lax.dynamic_update_slice(o, unpack_chunk(b)[None],
+                                             ((idx + 1 - t) % K, 0))
+            return (b_next, o), None
+
+        (b, out), _ = jax.lax.scan(gather_pipe, (b, out),
+                                   jnp.arange(1, K - 1))
+        out = jax.lax.dynamic_update_slice(                # trailing store
+            out, unpack_chunk(b)[None], ((idx + 2 - K) % K, 0))
+        return out.reshape(-1)[:n]
+
     def gather(state, t):
         b, o = state
         b = jax.lax.ppermute(b, axis, perm)
-        c = quant.unpack_codes(b, bits, C, lane_bits=lane_k, bias=bias_k)
-        o = jax.lax.dynamic_update_slice(o, c[None], ((idx + 1 - t) % K, 0))
+        o = jax.lax.dynamic_update_slice(o, unpack_chunk(b)[None],
+                                         ((idx + 1 - t) % K, 0))
         return (b, o), None
 
     (_, out), _ = jax.lax.scan(gather, (buf, out), jnp.arange(1, K))
@@ -588,17 +721,36 @@ def _reduce_rsag(plan: WirePlan, xs, keys, n: int) -> jax.Array:
     partial-sum multiplicity compounding like the ring's nested levels.
     The LAST level's all-gather stores dequantized f32 directly (fused
     ``unpack_dequantize`` under ``use_pallas``) — earlier levels must stay
-    int32 codes because later levels keep summing them."""
-    codes = _flat_codes(plan, xs, keys)
+    int32 codes because later levels keep summing them.
+
+    Under ``use_pallas`` + ``pipeline_hops`` level 0's quantize->pack->
+    chunk front-end fuses into ONE ``quantize_pack_chunk`` megakernel
+    pass (replacing the per-leaf quantize kernels, the XLA pad/reshape
+    chunking AND hop 1's ``pack_sums``); later levels chunk the previous
+    level's output as before."""
+    qcfg = plan.quant
     active = [(axis, int(K)) for axis, K in zip(plan.axes, plan.axis_sizes)
               if K > 1]
+    front = None
+    if qcfg.use_pallas and qcfg.pipeline_hops and active:
+        from repro.kernels import ops as kops
+        lane0 = quant.packed_lane_bits(qcfg.bits, 1)
+        front = kops.quantize_pack_chunk(
+            jnp.concatenate([x.reshape(-1) for x in xs]), None, qcfg.bits,
+            clip=qcfg.clip, lane_bits=lane0, stochastic=qcfg.stochastic,
+            num_chunks=active[0][1], bias=quant.lane_bias(lane0),
+            u=_flat_noise(xs, keys))
+        codes = None
+    else:
+        codes = _flat_codes(plan, xs, keys)
     if not active:
         return quant.dequantize_codes(codes, plan.quant.bits,
                                       clip=plan.quant.clip)
     unit = 1
     for i, (axis, K) in enumerate(active):
         codes = _rsag_level(plan, codes, axis, K, unit, n,
-                            final=(i == len(active) - 1))
+                            final=(i == len(active) - 1),
+                            front=front if i == 0 else None)
         unit *= K
     return codes  # already dequantized f32 by the final level's store
 

@@ -51,6 +51,27 @@ def quantize_pack(x: jax.Array, key: jax.Array, bits: int, *,
                                stochastic=stochastic, interpret=_INTERPRET)
 
 
+def quantize_pack_chunk(x: jax.Array, key: jax.Array, bits: int, *,
+                        clip: float = 1.0, lane_bits: int = 0,
+                        stochastic: bool = True, num_chunks: int = 1,
+                        bias: int | None = None,
+                        u: jax.Array | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Fused collective front-end through the megakernel: quantize ``x``,
+    split into ``num_chunks`` chunks and return (packed words (K, Wc),
+    codes (K, C)) in one pass — the ring's (buf, acc) init at
+    ``num_chunks=1`` and the rsag level-0 (chunks, hop-1 payload).  ``u``
+    supplies the rounding noise directly (the per-leaf streams the
+    collectives concatenate); otherwise drawn from ``key``."""
+    if u is None:
+        u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    return _pack.quantize_pack_chunk(x, u, bits, clip=clip,
+                                     lane_bits=lane_bits,
+                                     stochastic=stochastic,
+                                     num_chunks=num_chunks, bias=bias,
+                                     interpret=_INTERPRET)
+
+
 def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
            lane_bits: int = 0, sum_of: int = 1,
            bias: int | None = None) -> jax.Array:

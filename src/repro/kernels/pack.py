@@ -20,6 +20,14 @@ whole hot transform in one VMEM pass:
                                    scatter-phase payload builder: the running
                                    chunk re-packs at each hop group's grown
                                    lane width before it re-enters the ring)
+  quantize_pack_chunk: f32 x, u ->  the collective FRONT-END megakernel:
+                                   quantize, split into num_chunks equal
+                                   chunks, and emit BOTH the per-chunk
+                                   packed uint32 words AND the per-chunk
+                                   int32 codes in ONE pass — the ring's
+                                   (buf, acc) init (num_chunks=1) and the
+                                   rsag level-0 (chunks, hop-1 payload)
+                                   without a second unpack/chunking pass
 
 Blocks are (cpw, BLOCK_ROWS, 128) for the planar operands against
 (BLOCK_ROWS, 128) word blocks — the planes of one word block ride in the
@@ -221,9 +229,123 @@ def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
         ],
         out_specs=pl.BlockSpec((cpw, BLOCK_ROWS, LANES), lambda i: (0, i, 0)),
         out_shape=jax.ShapeDtypeStruct((cpw, R, LANES), jnp.int32),
+        # the accumulate is in-place: the planar acc operand donates its
+        # buffer to the output (the scan carry never copies)
+        input_output_aliases={1: 0},
         interpret=interpret,
     )(words, acc_planes)
     return planes.reshape(cpw, W_pad)[:, :W].reshape(-1)[:n]
+
+
+def _quantize_pack_chunk_kernel(x_ref, u_ref, words_ref, codes_ref, *,
+                                gain: float, g: int, lane: int, K: int,
+                                cpw: int, C: int, Wc: int, br: int,
+                                bias: int, stochastic: bool):
+    x = x_ref[...].astype(jnp.float32)                 # (K·cpw, br, LANES)
+    xq = jnp.clip(x, -1.0, 1.0) * gain   # clip interval folded into gain
+    if stochastic:
+        rounded = jnp.floor(xq + u_ref[...])
+    else:
+        rounded = jnp.round(xq)
+    codes = jnp.clip(rounded, -g, g - 1).astype(jnp.int32)
+
+    # all chunks ride in the SAME grid step (leading dim = K·cpw planes):
+    # one row-stripe grid keeps the step count O(R/br) instead of O(K·R/br)
+    shape = (K, cpw) + x.shape[1:]                     # (K, cpw, br, LANES)
+    codes = codes.reshape(shape)
+    plane = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    col = jax.lax.broadcasted_iota(jnp.int32, shape, 3)
+    w = (pl.program_id(0) * br + row) * shape[3] + col     # word index
+    valid = (w < Wc) & (plane * Wc + w < C)            # real elements only
+    codes_ref[...] = jnp.where(valid, codes, 0).reshape(K * cpw, br, -1)
+    # modular uint32 biasing: exact even for the lane-symmetric 2^(lane-1)
+    # bias at lane 32 (an int32 add would overflow)
+    biased = jnp.where(valid, codes.astype(jnp.uint32) + jnp.uint32(bias),
+                       jnp.uint32(0))
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * lane).reshape(1, cpw, 1, 1)
+    words_ref[...] = jnp.sum(biased << shifts, axis=1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "clip", "lane_bits",
+                                             "stochastic", "num_chunks",
+                                             "bias", "interpret"))
+def quantize_pack_chunk(x: jax.Array, u: jax.Array, bits: int, *,
+                        clip: float = 1.0, lane_bits: int = 0,
+                        stochastic: bool = True, num_chunks: int = 1,
+                        bias: int | None = None,
+                        interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Fused collective front-end: quantize ``x``, split into ``num_chunks``
+    chunks of C = ceil(n/num_chunks), and emit per chunk BOTH the packed
+    uint32 wire words (num_chunks, ceil(C/cpw)) and the int32 codes
+    (num_chunks, C) — one VMEM pass instead of quantize + pack + XLA
+    pad/reshape chunking.
+
+    The chunk-pad tail (n..num_chunks·C) quantizes a zero input with zero
+    noise to the REAL zero code (floor(0+0) = 0), matching the sequential
+    path's ``jnp.pad`` of the code vector, so pad elements are biased on
+    the wire exactly like the pure path; word padding past C stays raw 0.
+    ``bias`` overrides the native +G code bias (the rsag level-0 payload's
+    lane-symmetric ``lane_bias`` — identical to G at the native lane).
+
+    Bit-exact with ``ref.quantize_pack_chunk_ref``.
+    """
+    n = x.size
+    K = int(num_chunks)
+    lane = lane_bits or bits
+    if lane > 32:
+        raise ValueError(f"lane width {lane} exceeds the 32-bit container")
+    cpw = 32 // lane
+    C = -(-n // K)
+    Wc = -(-C // cpw)
+    # the block spans every chunk (K·cpw leading planes): size the row
+    # stripe to an ~8 MB VMEM budget — shrink when the plane count is
+    # large, grow (fewer grid steps) while a wider stripe still fits and
+    # the chunk isn't already covered
+    br = BLOCK_ROWS
+    while K * cpw * br * LANES * 4 > 8 * 2 ** 20 and br > 8:
+        br //= 2
+    while K * cpw * br * LANES * 8 <= 8 * 2 ** 20 and br * LANES < Wc:
+        br *= 2
+    per_block = br * LANES
+    Wc_pad = -(-Wc // per_block) * per_block
+    R = Wc_pad // LANES
+
+    def planar(a):
+        flat = jnp.pad(a.reshape(-1).astype(jnp.float32), (0, K * C - n))
+        ch = jnp.pad(flat.reshape(K, C), ((0, 0), (0, cpw * Wc - C)))
+        return jnp.pad(ch.reshape(K, cpw, Wc),
+                       ((0, 0), (0, 0), (0, Wc_pad - Wc))
+                       ).reshape(K * cpw, R, LANES)
+
+    xf = planar(x) / clip
+    uf = planar(u)
+
+    gain = float(2 ** (bits - 1))
+    g = int(2 ** (bits - 1))
+    words, codes = pl.pallas_call(
+        functools.partial(_quantize_pack_chunk_kernel, gain=gain, g=g,
+                          lane=lane, K=K, cpw=cpw, C=C, Wc=Wc, br=br,
+                          bias=g if bias is None else int(bias),
+                          stochastic=stochastic),
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((K * cpw, br, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((K * cpw, br, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((K, br, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((K * cpw, br, LANES), lambda i: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, R, LANES), jnp.uint32),
+            jax.ShapeDtypeStruct((K * cpw, R, LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xf, uf)
+    words = words.reshape(K, -1)[:, :Wc]
+    codes = codes.reshape(K, cpw, Wc_pad)[:, :, :Wc].reshape(K, -1)[:, :C]
+    return words, codes
 
 
 def _pack_sums_kernel(codes_ref, words_ref, *, bias: int, lane: int, cpw: int,

@@ -54,6 +54,28 @@ def repack_ref(packed: jnp.ndarray, acc: jnp.ndarray, bits: int, size: int, *,
         packed, bits, size, lane_bits=lane_bits, sum_of=sum_of, bias=bias)
 
 
+def quantize_pack_chunk_ref(x: jnp.ndarray, u: jnp.ndarray, bits: int, *,
+                            clip: float = 1.0, lane_bits: int = 0,
+                            stochastic: bool = True, num_chunks: int = 1,
+                            bias: int | None = None):
+    """Oracle for the fused quantize->pack->chunk megakernel: quantize,
+    zero-pad the code vector to num_chunks·ceil(n/num_chunks) (pad = real
+    zero codes, exactly what quantizing a zero input with zero noise
+    yields), chunk, and pack each chunk planar at ``lane_bits`` with the
+    native +G bias (or the explicit ``bias``).  Returns (words (K, Wc),
+    codes (K, C))."""
+    from repro.core.quantization import pack_codes
+    codes = stochastic_quantize_ref(x, u, bits, clip=clip,
+                                    stochastic=stochastic).reshape(-1)
+    n = codes.size
+    K = int(num_chunks)
+    C = -(-n // K)
+    chunks = jnp.pad(codes, (0, K * C - n)).reshape(K, C)
+    words = jnp.stack([pack_codes(chunks[k], bits, lane_bits=lane_bits,
+                                  bias=bias) for k in range(K)])
+    return words, chunks
+
+
 def pack_sums_ref(codes: jnp.ndarray, bits: int, *, lane_bits: int = 0,
                   sum_of: int = 1, bias: int | None = None) -> jnp.ndarray:
     """Oracle for the scatter-phase pack kernel: bias partial-sum codes and

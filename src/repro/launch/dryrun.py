@@ -19,6 +19,13 @@ standard step on the single-pod mesh (DESIGN.md §6).
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
       [--mesh single|multi|both] [--collective paper|int] [--skip-existing]
+      [--profile-dir DIR]
+
+``--profile-dir`` wraps the whole session in ``jax.profiler.trace``: the
+trace/lower/compile work on the forced-device mesh lands as an xplane
+artifact under ``DIR/plugins/profile/<ts>/`` (open with TensorBoard or
+xprof).  The committed 16x16 dry-run trace referenced by the benchmark
+docs lives under ``experiments/dryrun/profile/`` (see tests/README.md).
 """
 
 import argparse
@@ -284,8 +291,17 @@ def main():
     ap.add_argument("--suffix", default="")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--profile-dir", default="",
+                    help="write a jax.profiler trace of the dry-run session "
+                         "(trace + compile on the forced-device mesh) to "
+                         "DIR/plugins/profile/<ts>/ — open with TensorBoard "
+                         "or xprof")
     args = ap.parse_args()
-    failures = run(args)
+    if args.profile_dir:
+        with jax.profiler.trace(args.profile_dir):
+            failures = run(args)
+    else:
+        failures = run(args)
     if failures:
         raise SystemExit(f"{failures} combinations FAILED")
 

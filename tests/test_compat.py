@@ -52,6 +52,44 @@ def test_partial_request_degrades_to_full_manual_below_gate():
 @pytest.mark.skipif(not compat.HAS_PARTIAL_AUTO,
                     reason="partial-auto shard_map needs jax >= 0.7 "
                            "(0.4.x XLA crashes on manual subgroups)")
+def test_partial_auto_pipelined_ring_matches_full_manual():
+    """jax >= 0.7 only: the double-buffered ring collective
+    (``pipeline_hops=True``, the default) lowered with the `model` axis
+    left Auto (partial-auto shard_map) must aggregate bit-identically to
+    the fully-Manual lowering — the pipelined ppermute scan must survive
+    the GSPMD partitioner handling the Auto axis around it."""
+    if jax.device_count() < 2:
+        pytest.skip("needs 2 devices for a non-degenerate ring")
+    from repro.config.base import QuantConfig
+    from repro.core import aggregation as agg
+
+    mesh = compat.make_mesh((2, 1), ("data", "model"))
+    qcfg = QuantConfig(bits=8, use_pallas=True)  # pipeline_hops defaults on
+    plan = agg.make_wire_plan("ring", qcfg, ("data",), (2,))
+    assert plan.effective == "ring"
+    d = 4096
+    delta = jax.random.normal(jax.random.PRNGKey(0), (2, d), jnp.float32)
+    lam = jnp.ones((2,), jnp.float32)
+    key = jax.random.PRNGKey(3)
+
+    def body(dl, l, k):
+        out = agg.aggregate(plan, {"w": dl[0]}, jnp.float32(0.5), l[0], k)
+        return out["w"]
+
+    outs = {}
+    with compat.set_mesh(mesh):
+        for names in ({"data"}, {"data", "model"}):
+            f = jax.jit(compat.shard_map(
+                body, mesh=mesh, in_specs=(P("data"), P("data"), P()),
+                out_specs=P(), check_vma=False, axis_names=names))
+            outs[frozenset(names)] = np.asarray(f(delta, lam, key))
+    np.testing.assert_array_equal(outs[frozenset({"data"})],
+                                  outs[frozenset({"data", "model"})])
+
+
+@pytest.mark.skipif(not compat.HAS_PARTIAL_AUTO,
+                    reason="partial-auto shard_map needs jax >= 0.7 "
+                           "(0.4.x XLA crashes on manual subgroups)")
 def test_partial_auto_keeps_model_axis_auto():
     """jax >= 0.7 only: with axis_names={'data'} the `model` axis must stay
     Auto inside the body (manual_axes() == {'data'}) — the tensor-parallel

@@ -553,9 +553,12 @@ def test_auto_collective_resolves_to_byte_minimal_mode():
 
 def test_pallas_kernels_routed_into_packed_ring_and_rsag():
     """With use_pallas=True the packed/ring/rsag collectives must execute
-    the fused quantize_pack / unpack_dequantize / repack / pack_sums
-    kernels (call-counted at trace time) and match the pure-jnp paths
-    bit-exactly (interpret mode on CPU)."""
+    the fused kernels (call-counted at trace time) and match the pure-jnp
+    paths bit-exactly (interpret mode on CPU).  Under the default
+    ``pipeline_hops`` schedule the ring/rsag front-ends fuse into the
+    ``quantize_pack_chunk`` megakernel, which must REPLACE the separate
+    front kernels (quantize_pack on the ring, the per-leaf
+    stochastic_quantize_codes on rsag) — absence is asserted too."""
     run_py("""
     import dataclasses, jax, jax.numpy as jnp, numpy as np
     from repro.configs import get_config, reduced
@@ -566,7 +569,8 @@ def test_pallas_kernels_routed_into_packed_ring_and_rsag():
     import repro.kernels.ops as kops
 
     calls = {}
-    for name in ("quantize_pack", "unpack_dequantize", "repack", "pack_sums"):
+    for name in ("quantize_pack", "quantize_pack_chunk", "unpack_dequantize",
+                 "repack", "pack_sums", "stochastic_quantize_codes"):
         def wrap(orig=getattr(kops, name), name=name):
             def f(*a, **kw):
                 calls[name] = calls.get(name, 0) + 1
@@ -579,13 +583,21 @@ def test_pallas_kernels_routed_into_packed_ring_and_rsag():
     model = build_model(base)
     params = model.init(jax.random.PRNGKey(0))
     batch = token_batch(jax.random.PRNGKey(1), 12, 32, base.model.vocab_size)
+    CASES = (
+        ("packed", ("quantize_pack", "unpack_dequantize"),
+         ("quantize_pack_chunk",)),           # hop-free: no megakernel
+        ("ring", ("quantize_pack_chunk", "repack"),
+         ("quantize_pack",)),                 # megakernel replaces the
+                                              # quantize_pack + repack-init
+        # rsag: megakernel front (chunking + hop-1 payload), pack_sums for
+        # the later payloads, repack accumulates, and the final all-gather
+        # stores through the FUSED unpack_dequantize (no int32 round-trip)
+        ("rsag", ("quantize_pack_chunk", "pack_sums", "repack",
+                  "unpack_dequantize"),
+         ("stochastic_quantize_codes",)),     # no per-leaf quantize passes
+    )
     with set_mesh(mesh):
-        for mode, expected in (("packed", ("quantize_pack", "unpack_dequantize")),
-                               ("ring", ("quantize_pack", "repack")),
-                               # rsag's final all-gather stores through the
-                               # FUSED unpack_dequantize (no int32 round-trip)
-                               ("rsag", ("pack_sums", "repack",
-                                         "unpack_dequantize"))):
+        for mode, expected, absent in CASES:
             outs = {}
             for pallas in (False, True):
                 calls.clear()
@@ -596,6 +608,8 @@ def test_pallas_kernels_routed_into_packed_ring_and_rsag():
                 if pallas:
                     for kernel in expected:
                         assert calls.get(kernel, 0) > 0, (mode, kernel, calls)
+                    for kernel in absent:
+                        assert calls.get(kernel, 0) == 0, (mode, kernel, calls)
                 else:
                     assert not calls, (mode, calls)
             d = jax.tree_util.tree_map(
@@ -604,6 +618,50 @@ def test_pallas_kernels_routed_into_packed_ring_and_rsag():
             assert max(jax.tree_util.tree_leaves(d)) == 0.0, mode
     print("OK")
     """)
+
+
+def test_pipeline_hops_bit_identical_across_schedules():
+    """The double-buffered hop schedule (``pipeline_hops=True``, the
+    default) must aggregate BIT-IDENTICALLY to the PR-7 sequential
+    schedule under every wire mode — same hops, same accumulation order,
+    only the issue order differs — on both the flat (2,4) cohort and the
+    nested (2,2,2) multi-axis cohort, with the Pallas kernels in the
+    loop (the megakernel front-ends are exercised by the default)."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+
+    for shape, axes in (((2, 4), ("data", "model")),
+                        ((2, 2, 2), ("pod", "data", "model"))):
+        mesh = make_mesh(shape, axes)
+        base = reduced(get_config("olmo-1b"))
+        base = dataclasses.replace(base, quant=dataclasses.replace(
+            base.quant, use_pallas=True))
+        model = build_model(base)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = token_batch(jax.random.PRNGKey(1), 12, 32,
+                            base.model.vocab_size)
+        with set_mesh(mesh):
+            for mode in ("paper", "int", "packed", "ring", "rsag", "auto"):
+                outs = {}
+                for pipelined in (True, False):
+                    cfg = dataclasses.replace(base, quant=dataclasses.replace(
+                        base.quant, pipeline_hops=pipelined))
+                    f = jax.jit(make_fl_round(model, cfg, mesh,
+                                              collective=mode))
+                    outs[pipelined], _ = f(params, batch,
+                                           jax.random.PRNGKey(2))
+                d = jax.tree_util.tree_map(
+                    lambda a,b: float(jnp.abs(a.astype(jnp.float32)
+                                              -b.astype(jnp.float32)).max()),
+                    outs[True], outs[False])
+                assert max(jax.tree_util.tree_leaves(d)) == 0.0, (shape, mode)
+    print("OK")
+    """, timeout=900)
 
 
 def test_fleet_round_bit_identical_across_collectives():

@@ -107,6 +107,57 @@ def test_quantize_pack_kernel_guard_lanes(bits, lane_bits):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("n,num_chunks", [(17, 1), (1000, 3), (4096, 5),
+                                          (40_000, 16), (421_642, 2),
+                                          (421_642, 16)])
+def test_quantize_pack_chunk_megakernel_matches_ref(n, num_chunks, bits):
+    """The fused quantize->pack->chunk megakernel (the pipelined collective
+    front-end) is bit-exact against the ref oracle in BOTH outputs — the
+    per-chunk wire words and the chunked codes — for aligned and ragged
+    chunkings (the chunk-pad tail quantizes to real zero codes)."""
+    from repro.kernels.pack import quantize_pack_chunk
+    x = jax.random.normal(jax.random.PRNGKey(26), (n,)) * 0.5
+    u = jax.random.uniform(jax.random.PRNGKey(27), (n,))
+    words, codes = quantize_pack_chunk(x, u, bits, num_chunks=num_chunks,
+                                       interpret=True)
+    w_ref, c_ref = ref.quantize_pack_chunk_ref(x, u, bits,
+                                               num_chunks=num_chunks)
+    assert words.dtype == jnp.uint32 and codes.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(w_ref))
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(c_ref))
+
+
+@pytest.mark.parametrize("bits", [2, 8])
+@pytest.mark.parametrize("num_chunks", [4, 16])
+def test_quantize_pack_chunk_rsag_front_lane_bias(bits, num_chunks):
+    """The rsag level-0 front: guard lane + lane-symmetric bias (what the
+    fused scatter payload ships) stays bit-exact, and the K=1 default-bias
+    case degenerates to quantize_pack's words exactly."""
+    n = 10_000
+    lane = Q.packed_lane_bits(bits, 1)
+    b = Q.lane_bias(lane)
+    x = jax.random.normal(jax.random.PRNGKey(28), (n,)) * 0.7
+    u = jax.random.uniform(jax.random.PRNGKey(29), (n,))
+    from repro.kernels.pack import quantize_pack_chunk
+    words, codes = quantize_pack_chunk(x, u, bits, lane_bits=lane,
+                                       num_chunks=num_chunks, bias=b,
+                                       interpret=True)
+    w_ref, c_ref = ref.quantize_pack_chunk_ref(x, u, bits, lane_bits=lane,
+                                               num_chunks=num_chunks, bias=b)
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(w_ref))
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(c_ref))
+    # K=1, native lane, default bias == one quantize_pack pass
+    w1, c1 = quantize_pack_chunk(x, u, bits, lane_bits=bits, num_chunks=1,
+                                 interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(w1[0]),
+        np.asarray(quantize_pack(x, u, bits, lane_bits=bits, interpret=True)))
+    np.testing.assert_array_equal(
+        np.asarray(c1[0]),
+        np.asarray(ref.stochastic_quantize_ref(x, u, bits).reshape(-1)))
+
+
 @pytest.mark.parametrize("bits", [2, 4, 8, 16])
 @pytest.mark.parametrize("n", [17, 4096, 40_000])
 def test_unpack_dequantize_kernel_matches_ref(bits, n):
