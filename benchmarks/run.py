@@ -30,6 +30,8 @@ REGISTRY = {
               "power, {1e3,1e5} fleets", "benchmarks.power_policies"),
     "roofline": ("roofline table from dry-run artifacts",
                  "benchmarks.roofline_report"),
+    "obs": ("streaming-telemetry tap overhead (on vs off, fleet scan)",
+            "benchmarks.obs_overhead"),
     "ablations": ("non-IID split + Pallas-kernel-in-the-loop ablations",
                   "benchmarks.ablations"),
 }
@@ -54,7 +56,10 @@ def main() -> None:
                          "also gates the Pallas wire kernels' speedups and "
                          "the collective wall-clock schedule wins (pipelined "
                          "<= sequential on the hop modes) vs their committed "
-                         "baselines")
+                         "baselines; also gates the streaming-telemetry tap "
+                         "overhead (<=5% over tap-off on the fleet scan), "
+                         "the JSONL record schema and the committed "
+                         "span-summary coverage")
     ap.add_argument("--update-baselines", action="store_true",
                     help="re-measure and REWRITE the committed baselines the "
                          "gates compare against (collective bytes + "
@@ -75,7 +80,7 @@ def main() -> None:
         return
     if args.check:
         from benchmarks import (collective_modes, fleet_scale, kernels_micro,
-                                power_policies)
+                                obs_overhead, power_policies)
         regressed = collective_modes.check()
         if regressed:
             raise SystemExit(
@@ -103,6 +108,13 @@ def main() -> None:
                 f"BENCH_power_policies.json")
         print("# --check: adaptive power <= fixed at matched outage OK",
               file=sys.stderr)
+        regressed = obs_overhead.check()
+        if regressed:
+            raise SystemExit(
+                f"{regressed} obs gate(s) failed (tap overhead / record "
+                f"schema / span coverage)")
+        print("# --check: telemetry tap overhead + schema + span coverage "
+              "OK", file=sys.stderr)
         return
     selected = [s for s in args.only.split(",") if s] or list(REGISTRY)
 

@@ -111,6 +111,7 @@ import jax.numpy as jnp
 
 from repro.config.base import COLLECTIVE_CHOICES, QuantConfig
 from repro.core import quantization as quant
+from repro.obs import trace as obs_trace
 
 PyTree = Any
 EPS = 1e-12
@@ -344,19 +345,23 @@ def aggregate(plan: WirePlan, delta: PyTree, alpha: jnp.ndarray,
     qcfg = plan.quant
     scale = float(plan.num_shards)
     w = (alpha * lam).astype(jnp.float32)
-    den = jax.lax.psum(w, plan.axes)
+    with obs_trace.phase_span("wire/psum"):
+        den = jax.lax.psum(w, plan.axes)
 
     leaves, treedef = jax.tree_util.tree_flatten(delta)
     keys = jax.random.split(key, len(leaves))
-    xs = [leaf.astype(jnp.float32) * (w * scale) for leaf in leaves]
+    with obs_trace.phase_span("wire/quantize_pack"):
+        # the lam-weighting is the quantizer's input prep — wire front-end
+        xs = [leaf.astype(jnp.float32) * (w * scale) for leaf in leaves]
     n = sum(leaf.size for leaf in leaves)
     deq = _REDUCERS[plan.effective](plan, xs, keys, n)  # flat f32 Σ codes / G
-    deq = deq / (jnp.maximum(den, EPS) * scale)
-
-    out, offset = [], 0
-    for leaf in leaves:
-        out.append(deq[offset: offset + leaf.size].reshape(leaf.shape))
-        offset += leaf.size
+    with obs_trace.phase_span("wire/unpack_dequant"):
+        # renormalize + re-leaf the dequantized sum — wire back-end
+        deq = deq / (jnp.maximum(den, EPS) * scale)
+        out, offset = [], 0
+        for leaf in leaves:
+            out.append(deq[offset: offset + leaf.size].reshape(leaf.shape))
+            offset += leaf.size
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -365,12 +370,14 @@ def _exec_paper(plan: WirePlan, delta, alpha, lam, key) -> PyTree:
     payload is n-bit), then float all-reduce of the weighted survivors."""
     qcfg = plan.quant
     if qcfg.enabled and qcfg.quantize_uplink:
-        delta = quant.quantize_tree(delta, key, qcfg)
+        with obs_trace.phase_span("wire/quantize_pack"):
+            delta = quant.quantize_tree(delta, key, qcfg)
     w = (alpha * lam).astype(jnp.float32)
     den = jax.lax.psum(w, plan.axes)
 
     def agg(dl):
-        num = jax.lax.psum(dl.astype(jnp.float32) * w, plan.axes)
+        with obs_trace.phase_span("wire/psum"):
+            num = jax.lax.psum(dl.astype(jnp.float32) * w, plan.axes)
         return num / jnp.maximum(den, EPS)
 
     return jax.tree_util.tree_map(agg, delta)
@@ -407,11 +414,14 @@ def _flat_noise(xs: List[jax.Array], keys: jax.Array) -> jax.Array:
 def _reduce_int(plan: WirePlan, xs, keys, n: int) -> jax.Array:
     """codes cross the wire in the smallest int container (one psum)."""
     qcfg = plan.quant
-    codes = _flat_codes(plan, xs, keys)
+    with obs_trace.phase_span("wire/quantize_pack"):
+        codes = _flat_codes(plan, xs, keys)
     container = _int_container(qcfg.bits, plan.num_shards)
-    total = jax.lax.psum(codes.astype(container), plan.axes)
-    return quant.dequantize_codes(total.astype(jnp.int32), qcfg.bits,
-                                  clip=qcfg.clip)
+    with obs_trace.phase_span("wire/psum"):
+        total = jax.lax.psum(codes.astype(container), plan.axes)
+    with obs_trace.phase_span("wire/unpack_dequant"):
+        return quant.dequantize_codes(total.astype(jnp.int32), qcfg.bits,
+                                      clip=qcfg.clip)
 
 
 def _reduce_packed(plan: WirePlan, xs, keys, n: int) -> jax.Array:
@@ -425,20 +435,27 @@ def _reduce_packed(plan: WirePlan, xs, keys, n: int) -> jax.Array:
     lane = quant.packed_lane_bits(qcfg.bits, plan.num_shards)
     if qcfg.use_pallas:
         from repro.kernels import ops as kops
-        xcat = jnp.concatenate([x.reshape(-1) for x in xs])
-        words = kops.quantize_pack(xcat, None, qcfg.bits, clip=qcfg.clip,
-                                   lane_bits=lane, stochastic=qcfg.stochastic,
-                                   u=_flat_noise(xs, keys))
+        with obs_trace.phase_span("wire/quantize_pack"):
+            xcat = jnp.concatenate([x.reshape(-1) for x in xs])
+            words = kops.quantize_pack(xcat, None, qcfg.bits, clip=qcfg.clip,
+                                       lane_bits=lane,
+                                       stochastic=qcfg.stochastic,
+                                       u=_flat_noise(xs, keys))
+        with obs_trace.phase_span("wire/psum"):
+            total = jax.lax.psum(words, plan.axes)      # u32 on the wire
+        with obs_trace.phase_span("wire/unpack_dequant"):
+            return kops.unpack_dequantize(total, qcfg.bits, n,
+                                          clip=qcfg.clip, lane_bits=lane,
+                                          sum_of=plan.num_shards)
+    with obs_trace.phase_span("wire/quantize_pack"):
+        codes = _flat_codes(plan, xs, keys)
+        words = quant.pack_codes(codes, qcfg.bits, lane_bits=lane)
+    with obs_trace.phase_span("wire/psum"):
         total = jax.lax.psum(words, plan.axes)          # u32 on the wire
-        return kops.unpack_dequantize(total, qcfg.bits, n, clip=qcfg.clip,
-                                      lane_bits=lane,
+    with obs_trace.phase_span("wire/unpack_dequant"):
+        code_sum = quant.unpack_codes(total, qcfg.bits, n, lane_bits=lane,
                                       sum_of=plan.num_shards)
-    codes = _flat_codes(plan, xs, keys)
-    words = quant.pack_codes(codes, qcfg.bits, lane_bits=lane)
-    total = jax.lax.psum(words, plan.axes)              # u32 on the wire
-    code_sum = quant.unpack_codes(total, qcfg.bits, n, lane_bits=lane,
-                                  sum_of=plan.num_shards)
-    return quant.dequantize_codes(code_sum, qcfg.bits, clip=qcfg.clip)
+        return quant.dequantize_codes(code_sum, qcfg.bits, clip=qcfg.clip)
 
 
 def _reduce_ring(plan: WirePlan, xs, keys, n: int) -> jax.Array:
@@ -467,71 +484,76 @@ def _reduce_ring(plan: WirePlan, xs, keys, n: int) -> jax.Array:
     the sequential path disappears)."""
     qcfg = plan.quant
     bits = qcfg.bits
-    if qcfg.use_pallas:
-        from repro.kernels import ops as kops
-        xcat = jnp.concatenate([x.reshape(-1) for x in xs])
-        if qcfg.pipeline_hops:
-            # fused front-end: buf and acc in ONE megakernel pass
-            words, chunks = kops.quantize_pack_chunk(
-                xcat, None, bits, clip=qcfg.clip, lane_bits=bits,
-                stochastic=qcfg.stochastic, num_chunks=1,
-                u=_flat_noise(xs, keys))
-            buf, acc = words[0], chunks[0]
+    with obs_trace.phase_span("wire/quantize_pack"):
+        if qcfg.use_pallas:
+            from repro.kernels import ops as kops
+            xcat = jnp.concatenate([x.reshape(-1) for x in xs])
+            if qcfg.pipeline_hops:
+                # fused front-end: buf and acc in ONE megakernel pass
+                words, chunks = kops.quantize_pack_chunk(
+                    xcat, None, bits, clip=qcfg.clip, lane_bits=bits,
+                    stochastic=qcfg.stochastic, num_chunks=1,
+                    u=_flat_noise(xs, keys))
+                buf, acc = words[0], chunks[0]
+            else:
+                buf = kops.quantize_pack(xcat, None, bits, clip=qcfg.clip,
+                                         lane_bits=bits,
+                                         stochastic=qcfg.stochastic,
+                                         u=_flat_noise(xs, keys))
+                # own codes = exact unpack of the freshly packed buffer
+                acc = kops.repack(buf, jnp.zeros((n,), jnp.int32), bits, n,
+                                  lane_bits=bits, sum_of=1)
         else:
-            buf = kops.quantize_pack(xcat, None, bits, clip=qcfg.clip,
-                                     lane_bits=bits,
-                                     stochastic=qcfg.stochastic,
-                                     u=_flat_noise(xs, keys))
-            # own codes = exact unpack of the freshly packed buffer
-            acc = kops.repack(buf, jnp.zeros((n,), jnp.int32), bits, n,
-                              lane_bits=bits, sum_of=1)
-    else:
-        acc = _flat_codes(plan, xs, keys)
-        buf = quant.pack_codes(acc, bits, lane_bits=bits)
+            acc = _flat_codes(plan, xs, keys)
+            buf = quant.pack_codes(acc, bits, lane_bits=bits)
 
     m = 1  # codes per register so far (partial-sum multiplicity)
-    for axis, K in zip(plan.axes, plan.axis_sizes):
-        if K <= 1:
-            continue
-        lane = quant.packed_lane_bits(bits, m)
-        if m > 1:  # level transition: re-pack partial sums at the sum width
-            if qcfg.use_pallas:
-                from repro.kernels import ops as kops
-                buf = kops.pack_sums(acc, bits, lane_bits=lane, sum_of=m)
+    with obs_trace.phase_span("wire/ring_hops"):
+        for axis, K in zip(plan.axes, plan.axis_sizes):
+            if K <= 1:
+                continue
+            lane = quant.packed_lane_bits(bits, m)
+            if m > 1:  # level transition: re-pack partial sums at sum width
+                if qcfg.use_pallas:
+                    from repro.kernels import ops as kops
+                    buf = kops.pack_sums(acc, bits, lane_bits=lane, sum_of=m)
+                else:
+                    buf = quant.pack_codes(acc, bits, lane_bits=lane,
+                                           sum_of=m)
+            perm = [(j, (j + 1) % K) for j in range(K)]
+
+            def accum(b, a, *, lane=lane, m=m):
+                if qcfg.use_pallas:
+                    from repro.kernels import ops as kops
+                    return kops.repack(b, a, bits, n, lane_bits=lane,
+                                       sum_of=m)
+                return a + quant.unpack_codes(b, bits, n, lane_bits=lane,
+                                              sum_of=m)
+
+            if qcfg.pipeline_hops:
+                b = jax.lax.ppermute(buf, axis, perm)     # prime hop 1
+
+                def hop_pipe(carry, _, *, axis=axis, accum=accum):
+                    b, a = carry
+                    b_next = jax.lax.ppermute(b, axis, perm)  # hop h+1 ...
+                    a = accum(b, a)                       # ... while h lands
+                    return (b_next, a), None
+
+                (b, acc), _ = jax.lax.scan(hop_pipe, (b, acc), None,
+                                           length=K - 2)
+                acc = accum(b, acc)                       # trailing hop K-1
             else:
-                buf = quant.pack_codes(acc, bits, lane_bits=lane, sum_of=m)
-        perm = [(j, (j + 1) % K) for j in range(K)]
+                def hop(carry, _, *, axis=axis, accum=accum):
+                    b, a = carry
+                    b = jax.lax.ppermute(b, axis, perm)
+                    a = accum(b, a)
+                    return (b, a), None
 
-        def accum(b, a, *, lane=lane, m=m):
-            if qcfg.use_pallas:
-                from repro.kernels import ops as kops
-                return kops.repack(b, a, bits, n, lane_bits=lane, sum_of=m)
-            return a + quant.unpack_codes(b, bits, n, lane_bits=lane,
-                                          sum_of=m)
-
-        if qcfg.pipeline_hops:
-            b = jax.lax.ppermute(buf, axis, perm)         # prime hop 1
-
-            def hop_pipe(carry, _, *, axis=axis, accum=accum):
-                b, a = carry
-                b_next = jax.lax.ppermute(b, axis, perm)  # issue hop h+1 ...
-                a = accum(b, a)                           # ... while h lands
-                return (b_next, a), None
-
-            (b, acc), _ = jax.lax.scan(hop_pipe, (b, acc), None,
-                                       length=K - 2)
-            acc = accum(b, acc)                           # trailing hop K-1
-        else:
-            def hop(carry, _, *, axis=axis, accum=accum):
-                b, a = carry
-                b = jax.lax.ppermute(b, axis, perm)
-                a = accum(b, a)
-                return (b, a), None
-
-            (buf, acc), _ = jax.lax.scan(hop, (buf, acc), None,
-                                         length=K - 1)
-        m *= K
-    return quant.dequantize_codes(acc, bits, clip=qcfg.clip)
+                (buf, acc), _ = jax.lax.scan(hop, (buf, acc), None,
+                                             length=K - 1)
+            m *= K
+    with obs_trace.phase_span("wire/unpack_dequant"):
+        return quant.dequantize_codes(acc, bits, clip=qcfg.clip)
 
 
 def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
@@ -609,32 +631,45 @@ def _rsag_level(plan: WirePlan, codes: jax.Array, axis: str, K: int,
     # ---- reduce-scatter: hops grouped by (equal) lane width --------------
     # (sequential by construction: hop h+1 ships the PACK of hop h's
     # accumulate — only the front-end fuses, via ``front``)
-    groups: List[Tuple[int, List[int]]] = []
-    for h in range(1, K):
-        lane = quant.packed_lane_bits(bits, unit * h)
-        if groups and groups[-1][0] == lane:
-            groups[-1][1].append(h)
-        else:
-            groups.append((lane, [h]))
-    carry = chunk_at(idx)
-    if front is not None:
-        # hop 1's payload is the megakernel's pre-packed own chunk
-        lane1 = groups[0][0]
-        payload = jax.lax.dynamic_slice(
-            front_words, (idx, 0), (1, front_words.shape[1]))[0]
-        recv = jax.lax.ppermute(payload, axis, perm)
-        carry = unpack_add_fn(recv, chunk_at((idx - 1) % K), lane1)
-        groups = groups[1:]
-    for lane, hs in groups:
-        if len(hs) == 1:
-            carry = hop(carry, hs[0], lane)
-        else:
-            carry, _ = jax.lax.scan(
-                lambda c, h, lane=lane: (hop(c, h, lane), None),
-                carry, jnp.arange(hs[0], hs[-1] + 1))
+    with obs_trace.phase_span("wire/reduce_scatter"):
+        groups: List[Tuple[int, List[int]]] = []
+        for h in range(1, K):
+            lane = quant.packed_lane_bits(bits, unit * h)
+            if groups and groups[-1][0] == lane:
+                groups[-1][1].append(h)
+            else:
+                groups.append((lane, [h]))
+        carry = chunk_at(idx)
+        if front is not None:
+            # hop 1's payload is the megakernel's pre-packed own chunk
+            lane1 = groups[0][0]
+            payload = jax.lax.dynamic_slice(
+                front_words, (idx, 0), (1, front_words.shape[1]))[0]
+            recv = jax.lax.ppermute(payload, axis, perm)
+            carry = unpack_add_fn(recv, chunk_at((idx - 1) % K), lane1)
+            groups = groups[1:]
+        for lane, hs in groups:
+            if len(hs) == 1:
+                carry = hop(carry, hs[0], lane)
+            else:
+                carry, _ = jax.lax.scan(
+                    lambda c, h, lane=lane: (hop(c, h, lane), None),
+                    carry, jnp.arange(hs[0], hs[-1] + 1))
     # carry now holds the FULL sum (unit·K codes) of chunk (idx+1) mod K
 
     # ---- all-gather: redistribute finished chunks at the final lane ------
+    with obs_trace.phase_span("wire/all_gather"):
+        return _rsag_all_gather(plan, carry, axis, K, unit, n, C, idx,
+                                perm, pack_fn, final=final)
+
+
+def _rsag_all_gather(plan: WirePlan, carry: jax.Array, axis: str, K: int,
+                     unit: int, n: int, C: int, idx, perm, pack_fn, *,
+                     final: bool) -> jax.Array:
+    """The all-gather phase of one rsag level (span-scoped; see
+    :func:`_rsag_level` for the schedule semantics)."""
+    qcfg = plan.quant
+    bits = qcfg.bits
     lane_k = quant.packed_lane_bits(bits, unit * K)
     bias_k = quant.lane_bias(lane_k)
     buf = pack_fn(carry, lane_k)
@@ -732,20 +767,22 @@ def _reduce_rsag(plan: WirePlan, xs, keys, n: int) -> jax.Array:
     active = [(axis, int(K)) for axis, K in zip(plan.axes, plan.axis_sizes)
               if K > 1]
     front = None
-    if qcfg.use_pallas and qcfg.pipeline_hops and active:
-        from repro.kernels import ops as kops
-        lane0 = quant.packed_lane_bits(qcfg.bits, 1)
-        front = kops.quantize_pack_chunk(
-            jnp.concatenate([x.reshape(-1) for x in xs]), None, qcfg.bits,
-            clip=qcfg.clip, lane_bits=lane0, stochastic=qcfg.stochastic,
-            num_chunks=active[0][1], bias=quant.lane_bias(lane0),
-            u=_flat_noise(xs, keys))
-        codes = None
-    else:
-        codes = _flat_codes(plan, xs, keys)
+    with obs_trace.phase_span("wire/quantize_pack"):
+        if qcfg.use_pallas and qcfg.pipeline_hops and active:
+            from repro.kernels import ops as kops
+            lane0 = quant.packed_lane_bits(qcfg.bits, 1)
+            front = kops.quantize_pack_chunk(
+                jnp.concatenate([x.reshape(-1) for x in xs]), None,
+                qcfg.bits, clip=qcfg.clip, lane_bits=lane0,
+                stochastic=qcfg.stochastic, num_chunks=active[0][1],
+                bias=quant.lane_bias(lane0), u=_flat_noise(xs, keys))
+            codes = None
+        else:
+            codes = _flat_codes(plan, xs, keys)
     if not active:
-        return quant.dequantize_codes(codes, plan.quant.bits,
-                                      clip=plan.quant.clip)
+        with obs_trace.phase_span("wire/unpack_dequant"):
+            return quant.dequantize_codes(codes, plan.quant.bits,
+                                          clip=plan.quant.clip)
     unit = 1
     for i, (axis, K) in enumerate(active):
         codes = _rsag_level(plan, codes, axis, K, unit, n,

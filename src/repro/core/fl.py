@@ -110,6 +110,9 @@ from repro.core import aggregation as agg
 from repro.core import channel as ch
 from repro.core import energy as energy_mod
 from repro.core import quantization as quant
+from repro.obs import sinks as obs_sinks
+from repro.obs import tap as obs_tap
+from repro.obs import trace as obs_trace
 from repro.population import errors as pop_errors
 from repro.population import fleet as pop_fleet
 from repro.population import power as pop_power
@@ -151,6 +154,10 @@ class FLSimulator:
         self._round_fn = jax.jit(self._round)
         self._scan_fns: Dict[Any, Callable] = {}
         self._fleet_scan_fns: Dict[Any, Callable] = {}
+        # the CURRENT streaming tap (host callable) the compiled scans
+        # dispatch through — indirection so one tapped compile serves any
+        # sink across run_rounds calls; None while no tap is active
+        self._active_tap: Optional[Callable] = None
         # stateful heterogeneous population (None => the paper's homogeneous
         # i.i.d. cohort).  The state persists ACROSS run_rounds calls so
         # chunked train() keeps draining the same batteries / fading chain.
@@ -242,9 +249,22 @@ class FLSimulator:
             harvest_j=info.harvest_j, error_prob=cfg.channel.error_prob)
         return new_params, fleet, tel
 
-    def _fleet_scan_fn(self, eval_fn: Optional[Callable]) -> Callable:
-        """Jitted fleet-mode lax.scan: (params, FleetState, key) carry."""
-        key = eval_fn
+    def _tap_dispatch(self, tel):
+        """Host side of the in-scan io_callback: forward to the tap the
+        current run_rounds call installed (no-op between runs)."""
+        tap = self._active_tap
+        if tap is not None:
+            tap(tel)
+
+    def _fleet_scan_fn(self, eval_fn: Optional[Callable],
+                       tapped: bool) -> Callable:
+        """Jitted fleet-mode lax.scan: (params, FleetState, key) carry.
+
+        ``tapped`` bakes the streaming io_callback into the scan body (one
+        compile per (eval_fn, tapped) pair); untapped bodies trace nothing
+        obs-related, so their HLO is byte-identical to a no-obs build.
+        """
+        key = (eval_fn, tapped)
         if key not in self._fleet_scan_fns:
 
             def body(carry, xs):
@@ -254,8 +274,10 @@ class FLSimulator:
                 params, fleet, tel = self._fleet_round(params, fleet,
                                                        k_round, batches,
                                                        alphas)
-                tel["metric"] = (eval_fn(params) if eval_fn is not None
-                                 else tel["accuracy"])
+                if eval_fn is not None:
+                    tel["accuracy"] = eval_fn(params)
+                if tapped:
+                    obs_tap.emit_in_scan(tel, self._tap_dispatch)
                 return (params, fleet, rng), tel
 
             self._fleet_scan_fns[key] = jax.jit(
@@ -264,13 +286,15 @@ class FLSimulator:
 
     def _run_rounds_fleet(self, params, rounds: int, rng, *,
                           eval_fn: Optional[Callable], start_round: int,
-                          return_rng: bool):
+                          return_rng: bool, tap: Optional[Callable] = None):
         """Fleet-mode multi-round driver: ONE jitted ``lax.scan`` whose
         carry threads (params, FleetState, per-round key).  The data side
         (client minibatch stacking) is prepared before the scan exactly as
         in the legacy path; every per-round fleet update — fading,
         availability, selection, drops, battery debit — runs inside the
-        scan with no host round-trips (the 10^6-device workload)."""
+        scan with no host round-trips (the 10^6-device workload).  ``tap``
+        (a host callable taking the round telemetry dict) streams every
+        round out of the scan while it runs (``repro.obs.tap``)."""
         per_round = []
         rng_in = rng
         for _ in range(rounds):
@@ -281,9 +305,15 @@ class FLSimulator:
                                     *per_round)
         carry = (params, self.fleet_state,
                  jax.random.fold_in(rng_in, _FLEET_STREAM))
-        (params, fleet, _), tels = self._fleet_scan_fn(eval_fn)(carry, xs)
-        self.fleet_state = fleet
-        history = pop_tel.expand_history(tels, rounds, start_round)
+        scan_fn = self._fleet_scan_fn(eval_fn, tap is not None)
+        self._active_tap = tap
+        try:
+            (params, fleet, _), tels = scan_fn(carry, xs)
+            self.fleet_state = fleet
+            # materializes (blocks), so every in-scan callback has fired
+            history = pop_tel.expand_history(tels, rounds, start_round)
+        finally:
+            self._active_tap = None
         if return_rng:
             return params, history, rng
         return params, history
@@ -332,9 +362,11 @@ class FLSimulator:
         return new_params, RoundTelemetry(float(loss), float(acc),
                                           int(surv), e, tau)
 
-    def _scan_fn(self, eval_fn: Optional[Callable]) -> Callable:
-        """Jitted lax.scan over rounds; one compile per eval_fn identity."""
-        key = eval_fn
+    def _scan_fn(self, eval_fn: Optional[Callable],
+                 tapped: bool) -> Callable:
+        """Jitted lax.scan over rounds; one compile per (eval_fn, tapped)
+        pair — untapped bodies trace nothing obs-related."""
+        key = (eval_fn, tapped)
         if key not in self._scan_fns:
 
             def body(params, xs):
@@ -342,6 +374,10 @@ class FLSimulator:
                 new_params, loss, acc, surv = self._round(params, batches,
                                                           alphas, k)
                 metric = eval_fn(new_params) if eval_fn is not None else acc
+                if tapped:
+                    obs_tap.emit_in_scan(
+                        {"loss": loss, "accuracy": metric,
+                         "survivors": surv}, self._tap_dispatch)
                 return new_params, (loss, metric, surv)
 
             self._scan_fns[key] = jax.jit(
@@ -350,7 +386,8 @@ class FLSimulator:
 
     def run_rounds(self, params, rounds: int, rng, *,
                    eval_fn: Optional[Callable] = None, start_round: int = 0,
-                   return_rng: bool = False):
+                   return_rng: bool = False,
+                   tap: Optional[Callable] = None):
         """Jitted multi-round driver: one ``lax.scan`` over ``rounds``.
 
         Exactly reproduces ``rounds`` successive :meth:`run_round` calls —
@@ -369,6 +406,12 @@ class FLSimulator:
         though each call re-derives its carry key from its own ``rng``,
         so N single-round calls and one N-round scan follow different
         PRNG chains).
+
+        ``tap`` (a host callable taking the round telemetry dict —
+        usually ``obs.scan_sink_tap(sink)``) streams every round out of
+        the scan via an ordered ``io_callback`` WHILE it executes;
+        ``tap=None`` (default) traces nothing, keeping the lowered HLO
+        byte-identical to a build without observability.
         """
         if rounds <= 0:
             return (params, [], rng) if return_rng else (params, [])
@@ -376,19 +419,25 @@ class FLSimulator:
             return self._run_rounds_fleet(params, rounds, rng,
                                           eval_fn=eval_fn,
                                           start_round=start_round,
-                                          return_rng=return_rng)
+                                          return_rng=return_rng, tap=tap)
         per_round = []
         for _ in range(rounds):
             rng, k = jax.random.split(rng)
             per_round.append(self._round_inputs(k))
         xs = jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves),
                                     *per_round)
-        params, (losses, metrics, survs) = self._scan_fn(eval_fn)(params, xs)
-        e, tau = self.round_energy()
-        history = [{"round": start_round + t, "loss": float(losses[t]),
-                    "accuracy": float(metrics[t]),
-                    "survivors": int(survs[t]), "energy_j": e, "tau_s": tau}
-                   for t in range(rounds)]
+        scan_fn = self._scan_fn(eval_fn, tap is not None)
+        self._active_tap = tap
+        try:
+            params, (losses, metrics, survs) = scan_fn(params, xs)
+            e, tau = self.round_energy()
+            history = [{"round": start_round + t, "loss": float(losses[t]),
+                        "accuracy": float(metrics[t]),
+                        "survivors": int(survs[t]), "energy_j": e,
+                        "tau_s": tau}
+                       for t in range(rounds)]
+        finally:
+            self._active_tap = None
         if return_rng:
             return params, history, rng
         return params, history
@@ -417,7 +466,8 @@ class FLSimulator:
 
     def train(self, params, rounds: int, rng, *, target_accuracy: float = 0.0,
               eval_fn: Optional[Callable] = None, log_every: int = 0,
-              chunk_rounds: int = 0):
+              chunk_rounds: int = 0,
+              sink: Optional["obs_sinks.MetricsSink"] = None):
         """Run rounds until ``rounds`` or target accuracy; returns history.
 
         The hot path is the jitted :meth:`run_rounds` scan.  Without an
@@ -425,23 +475,30 @@ class FLSimulator:
         in ``chunk_rounds`` chunks (default 1, preserving the exact
         round-granular stop of the per-round loop) and stop as soon as the
         target metric is reached.
+
+        ``log_every`` prints through :class:`repro.obs.sinks.ConsoleSink`
+        (the one formatter interactive and streamed output share);
+        ``sink`` additionally streams every round's telemetry record out
+        of the jitted scan while it runs (``repro.obs``).
         """
         history = []
+        console = obs_sinks.ConsoleSink(log_every=log_every) \
+            if log_every else None
         chunk = chunk_rounds or (1 if target_accuracy else rounds)
         t = 0
         while t < rounds:
             n = min(chunk, rounds - t)
+            tap = (obs_tap.scan_sink_tap(sink, start_round=t)
+                   if sink is not None else None)
             params, hist, rng = self.run_rounds(params, n, rng,
                                                 eval_fn=eval_fn,
                                                 start_round=t,
-                                                return_rng=True)
+                                                return_rng=True, tap=tap)
             history.extend(hist)
-            if log_every:
+            if console is not None:
                 for h in hist:
-                    if h["round"] % log_every == 0:
-                        print(f"  round {h['round']:4d} loss={h['loss']:.4f} "
-                              f"acc={h['accuracy']:.4f} "
-                              f"survivors={h['survivors']}")
+                    console.emit(obs_sinks.make_record("fl_round",
+                                                       h["round"], h))
             t += n
             if target_accuracy and any(h["accuracy"] >= target_accuracy
                                        for h in hist):
@@ -479,7 +536,8 @@ def resolve_collective(config: Config, collective: Optional[str]) -> str:
 
 
 def make_fl_round(model, config: Config, mesh, *,
-                  collective: Optional[str] = None) -> Optional[Callable]:
+                  collective: Optional[str] = None,
+                  tap: Optional[Callable] = None) -> Optional[Callable]:
     """Build the jit-able distributed FL round.
 
     collective: "paper" (f32 wire, faithful) | "int" (integer-code wire)
@@ -505,6 +563,13 @@ def make_fl_round(model, config: Config, mesh, *,
     number energy accounting must charge; the per-phase split rides next
     to it as ``metrics["wire_phase_bits_per_param"]`` (e.g. rsag's
     reduce_scatter/all_gather legs — ``population.telemetry``).
+
+    ``tap`` (a host callable taking (metrics dict, flat shard index) —
+    usually ``obs.shard0_sink_tap(sink)``) streams each round's metrics
+    out of the shard_map via ``io_callback`` while the step executes; the
+    callback fires on every shard, so the host adapter filters to shard 0
+    (one record per round).  ``tap=None`` traces nothing — the lowered
+    HLO is byte-identical to a no-obs build.
     """
     fl = config.fl
     qcfg = config.quant
@@ -550,7 +615,8 @@ def make_fl_round(model, config: Config, mesh, *,
             return p, loss
 
         keys = jax.random.split(rng, I)
-        p_local, losses = jax.lax.scan(step, params, (micro, keys))
+        with obs_trace.phase_span("fl/local_steps"):
+            p_local, losses = jax.lax.scan(step, params, (micro, keys))
         delta = jax.tree_util.tree_map(lambda a_, b_: (a_ - b_).astype(jnp.float32),
                                        p_local, params)
 
@@ -561,8 +627,9 @@ def make_fl_round(model, config: Config, mesh, *,
             agg_delta = jax.tree_util.tree_map(lambda d: d * delta_scale,
                                                agg_delta)
 
-        new_params = jax.tree_util.tree_map(
-            lambda w, d: w + d.astype(w.dtype), params, agg_delta)
+        with obs_trace.phase_span("fl/apply"):
+            new_params = jax.tree_util.tree_map(
+                lambda w, d: w + d.astype(w.dtype), params, agg_delta)
         mean_loss = jax.lax.pmean(losses.mean(), axes)
         survivors = jax.lax.psum(lam, axes)
         return new_params, mean_loss, survivors
@@ -573,14 +640,28 @@ def make_fl_round(model, config: Config, mesh, *,
             rng = jax.random.fold_in(rng, jax.lax.axis_index(a))
         return rng
 
+    def _flat_shard():
+        # the flat shard index over ALL Manual mesh axes, row-major in mesh
+        # order — not just the data axes: pre-0.7 jax spells partial-auto
+        # as fully-Manual, so the body replicates over model-parallel axes
+        # and every replica of data-shard 0 would otherwise claim shard 0
+        manual = compat.manual_axes()
+        shard = jnp.int32(0)
+        for a in mesh.axis_names:
+            if a in manual:
+                shard = shard * int(mesh.shape[a]) + jax.lax.axis_index(a)
+        return shard
+
     def local_round(params, batch, rng):
         rng = _shard_rng(rng)
         lam = ch.sample_packet_success(jax.random.fold_in(rng, 11), (),
                                        config.channel.error_prob)
         new_params, mean_loss, survivors = _cohort_update(params, batch,
                                                           rng, lam)
-        return new_params, pop_tel.distributed_metrics(
+        metrics = pop_tel.distributed_metrics(
             plan, loss=mean_loss, survivors=survivors)
+        obs_tap.emit_on_shard0(metrics, _flat_shard(), tap)
+        return new_params, metrics
 
     def fleet_round(params, batch, rng, fleet):
         # the fleet update is REPLICATED: identical inputs (fleet, raw rng)
@@ -597,9 +678,7 @@ def make_fl_round(model, config: Config, mesh, *,
         fleet, info = pop_fleet.round_update(
             fleet, jax.random.fold_in(rng, _FLEET_STREAM), config,
             num_params, num_shards)
-        shard = jnp.int32(0)
-        for a, s in zip(axes, axis_sizes):
-            shard = shard * s + jax.lax.axis_index(a)
+        shard = _flat_shard()
         delta_scale = None
         if config.fleet.error_reweight:
             delta_scale = pop_errors.ipw_delta_scale(
@@ -618,6 +697,7 @@ def make_fl_round(model, config: Config, mesh, *,
                 outage_sel=info.outage_sel, cost_sel=info.cost_sel,
                 harvest_j=info.harvest_j,
                 error_prob=config.channel.error_prob))
+        obs_tap.emit_on_shard0(metrics, shard, tap)
         return new_params, metrics, fleet
 
     P = jax.sharding.PartitionSpec

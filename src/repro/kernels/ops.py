@@ -13,6 +13,7 @@ from repro.kernels import aggregate as _agg
 from repro.kernels import pack as _pack
 from repro.kernels import qmatmul as _qmm
 from repro.kernels import quantize as _quant
+from repro.obs import trace as _obs_trace
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -20,9 +21,10 @@ _INTERPRET = jax.default_backend() != "tpu"
 def stochastic_quantize_codes(x: jax.Array, key: jax.Array, bits: int, *,
                               clip: float = 1.0, stochastic: bool = True) -> jax.Array:
     u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
-    return _quant.stochastic_quantize_codes(x, u, bits, clip=clip,
-                                            stochastic=stochastic,
-                                            interpret=_INTERPRET)
+    with _obs_trace.phase_span("pallas/stochastic_quantize_codes"):
+        return _quant.stochastic_quantize_codes(x, u, bits, clip=clip,
+                                                stochastic=stochastic,
+                                                interpret=_INTERPRET)
 
 
 def stochastic_quantize(x: jax.Array, key: jax.Array, bits: int, *,
@@ -33,7 +35,9 @@ def stochastic_quantize(x: jax.Array, key: jax.Array, bits: int, *,
 
 
 def dequantize_codes(codes: jax.Array, bits: int, *, clip: float = 1.0) -> jax.Array:
-    return _quant.dequantize_codes(codes, bits, clip=clip, interpret=_INTERPRET)
+    with _obs_trace.phase_span("pallas/dequantize_codes"):
+        return _quant.dequantize_codes(codes, bits, clip=clip,
+                                       interpret=_INTERPRET)
 
 
 def quantize_pack(x: jax.Array, key: jax.Array, bits: int, *,
@@ -47,8 +51,11 @@ def quantize_pack(x: jax.Array, key: jax.Array, bits: int, *,
     """
     if u is None:
         u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
-    return _pack.quantize_pack(x, u, bits, clip=clip, lane_bits=lane_bits,
-                               stochastic=stochastic, interpret=_INTERPRET)
+    with _obs_trace.phase_span("pallas/quantize_pack"):
+        return _pack.quantize_pack(x, u, bits, clip=clip,
+                                   lane_bits=lane_bits,
+                                   stochastic=stochastic,
+                                   interpret=_INTERPRET)
 
 
 def quantize_pack_chunk(x: jax.Array, key: jax.Array, bits: int, *,
@@ -65,11 +72,12 @@ def quantize_pack_chunk(x: jax.Array, key: jax.Array, bits: int, *,
     collectives concatenate); otherwise drawn from ``key``."""
     if u is None:
         u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
-    return _pack.quantize_pack_chunk(x, u, bits, clip=clip,
-                                     lane_bits=lane_bits,
-                                     stochastic=stochastic,
-                                     num_chunks=num_chunks, bias=bias,
-                                     interpret=_INTERPRET)
+    with _obs_trace.phase_span("pallas/quantize_pack_chunk"):
+        return _pack.quantize_pack_chunk(x, u, bits, clip=clip,
+                                         lane_bits=lane_bits,
+                                         stochastic=stochastic,
+                                         num_chunks=num_chunks, bias=bias,
+                                         interpret=_INTERPRET)
 
 
 def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
@@ -78,16 +86,19 @@ def repack(packed: jax.Array, acc: jax.Array, bits: int, size: int, *,
     """Fused ring-hop accumulate: unpack wire words, add into the int32
     register tree (one VMEM pass).  ``bias`` overrides the sum_of·G un-bias
     (the rsag collective's lane-symmetric bias)."""
-    return _pack.repack(packed, acc, bits, size, lane_bits=lane_bits,
-                        sum_of=sum_of, bias=bias, interpret=_INTERPRET)
+    with _obs_trace.phase_span("pallas/repack"):
+        return _pack.repack(packed, acc, bits, size, lane_bits=lane_bits,
+                            sum_of=sum_of, bias=bias, interpret=_INTERPRET)
 
 
 def pack_sums(codes: jax.Array, bits: int, *, lane_bits: int = 0,
               sum_of: int = 1, bias: int | None = None) -> jax.Array:
     """Scatter-phase pack through the kernel: int32 partial-sum codes ->
     uint32 wire words at the hop's lane width (the rsag payload builder)."""
-    return _pack.pack_sums(codes, bits, lane_bits=lane_bits, sum_of=sum_of,
-                           bias=bias, interpret=_INTERPRET)
+    with _obs_trace.phase_span("pallas/pack_sums"):
+        return _pack.pack_sums(codes, bits, lane_bits=lane_bits,
+                               sum_of=sum_of, bias=bias,
+                               interpret=_INTERPRET)
 
 
 def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,
@@ -98,16 +109,20 @@ def unpack_dequantize(packed: jax.Array, bits: int, size: int, *,
     ``bias`` overrides the sum_of·G un-bias (the rsag all-gather's
     lane-symmetric bias) so finished chunks land as f32 directly — the
     fused scatter-store variant skipping the int32 round-trip."""
-    return _pack.unpack_dequantize(packed, bits, size, clip=clip,
-                                   lane_bits=lane_bits, sum_of=sum_of,
-                                   bias=bias, interpret=_INTERPRET)
+    with _obs_trace.phase_span("pallas/unpack_dequantize"):
+        return _pack.unpack_dequantize(packed, bits, size, clip=clip,
+                                       lane_bits=lane_bits, sum_of=sum_of,
+                                       bias=bias, interpret=_INTERPRET)
 
 
 def qmatmul(x_q: jax.Array, w_q: jax.Array, sx, sw) -> jax.Array:
-    return _qmm.qmatmul(x_q, w_q, jnp.float32(sx), jnp.float32(sw),
-                        interpret=_INTERPRET)
+    with _obs_trace.phase_span("pallas/qmatmul"):
+        return _qmm.qmatmul(x_q, w_q, jnp.float32(sx), jnp.float32(sw),
+                            interpret=_INTERPRET)
 
 
 def masked_aggregate(updates: jax.Array, weights: jax.Array,
                      eps: float = 1e-12) -> jax.Array:
-    return _agg.masked_aggregate(updates, weights, eps=eps, interpret=_INTERPRET)
+    with _obs_trace.phase_span("pallas/masked_aggregate"):
+        return _agg.masked_aggregate(updates, weights, eps=eps,
+                                     interpret=_INTERPRET)

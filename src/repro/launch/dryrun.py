@@ -19,7 +19,13 @@ standard step on the single-pod mesh (DESIGN.md §6).
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
       [--mesh single|multi|both] [--collective paper|int] [--skip-existing]
-      [--profile-dir DIR]
+      [--profile-dir DIR] [--telemetry-dir DIR]
+
+``--telemetry-dir`` streams one versioned ``dryrun_combo`` JSONL record
+per combo (arch/shape/mesh/status + compile_s and the peak-memory
+estimate when OK) to ``DIR/telemetry.jsonl`` as the sweep runs — the
+same record stream ``repro.launch.train --telemetry-dir`` writes for FL
+rounds (schema: ``repro.obs``).
 
 ``--profile-dir`` wraps the whole session in ``jax.profiler.trace``: the
 trace/lower/compile work on the forced-device mesh lands as an xplane
@@ -212,12 +218,28 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool, *,
     return record
 
 
+def _combo_payload(rec: dict) -> dict:
+    """The slim ``dryrun_combo`` telemetry payload of one combo record."""
+    payload = {"arch": rec["arch"], "shape": rec["shape"],
+               "mesh": rec["mesh"], "status": rec["status"]}
+    if rec["status"] == "OK":
+        payload.update(step=rec["step"], compile_s=rec["compile_s"],
+                       peak_estimate_bytes=rec["memory"]
+                       ["peak_estimate_bytes"])
+    return payload
+
+
 def run(args) -> int:
     os.makedirs(args.out, exist_ok=True)
     archs = [args.arch] if args.arch else ASSIGNED_ARCHS
     shapes = [args.shape] if args.shape else list(SHAPES)
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
+    sink = None
+    if getattr(args, "telemetry_dir", ""):
+        from repro.obs import sinks as obs_sinks
+        sink = obs_sinks.JsonlSink(args.telemetry_dir)
+    combo_index = 0
     failures = 0
     for arch in archs:
         for shape_name in shapes:
@@ -252,6 +274,11 @@ def run(args) -> int:
                            "traceback": traceback.format_exc()[-2000:]}
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
+                if sink is not None:
+                    from repro.obs import sinks as obs_sinks
+                    sink.emit(obs_sinks.make_record(
+                        "dryrun_combo", combo_index, _combo_payload(rec)))
+                combo_index += 1
                 if rec["status"] == "OK":
                     r = rec["roofline"]
                     print(f"[ok]   {tag:55s} {rec['step']:16s} "
@@ -263,6 +290,9 @@ def run(args) -> int:
                     print(f"[SKIP] {tag}: {rec['reason']}")
                 else:
                     print(f"[FAIL] {tag}: {rec['error']}")
+    if sink is not None:
+        sink.close()
+        print(f"telemetry: {sink.emitted} combo records -> {sink.path}")
     return failures
 
 
@@ -291,6 +321,9 @@ def main():
     ap.add_argument("--suffix", default="")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="stream one dryrun_combo JSONL record per combo "
+                         "here (off when empty; schema: repro.obs)")
     ap.add_argument("--profile-dir", default="",
                     help="write a jax.profiler trace of the dry-run session "
                          "(trace + compile on the forced-device mesh) to "

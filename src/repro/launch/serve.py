@@ -5,6 +5,12 @@ at 32k/500k scale).
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --devices 8 \
       model.n_layers=2 model.d_model=256 model.n_heads=4 model.n_kv_heads=4 \
       model.d_ff=512 model.vocab_size=512 --new-tokens 8
+
+``--telemetry-dir DIR`` streams one versioned ``serve_decode`` JSONL
+record per decode step (``latency_s``, ``tokens_per_s``) to
+``DIR/telemetry.jsonl`` (schema: ``repro.obs``).  Per-step latencies need
+a ``block_until_ready`` per step, so the stream changes decode timing —
+only the telemetry run pays that; the default path is untouched.
 """
 from __future__ import annotations
 
@@ -20,6 +26,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--telemetry-dir", default="",
+                    help="stream one serve_decode JSONL record per decode "
+                         "step here (off when empty; schema: repro.obs)")
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args()
     if args.devices:
@@ -70,15 +79,32 @@ def main():
         print(f"prefill {args.batch}x{args.prompt_len}: "
               f"{(time.perf_counter()-t0)*1e3:.0f} ms (incl. compile)")
 
+        sink = None
+        if args.telemetry_dir:
+            from repro.obs import sinks as obs_sinks
+            sink = obs_sinks.JsonlSink(args.telemetry_dir)
+
         tok = jnp.argmax(logits.reshape(args.batch, -1), -1)[:, None]
         t0 = time.perf_counter()
         for i in range(args.new_tokens):
+            ts = time.perf_counter()
             logits, cache = decode(params, cache, tok)
             tok = jnp.argmax(logits[:, -1], -1)[:, None]
+            if sink is not None:
+                # per-step latency needs a per-step sync — telemetry
+                # runs trade a little pipelining for the stream
+                jax.block_until_ready(tok)
+                lat = time.perf_counter() - ts
+                sink.emit(obs_sinks.make_record(
+                    "serve_decode", i,
+                    {"latency_s": lat, "tokens_per_s": args.batch / lat}))
         jax.block_until_ready(tok)
         dt = time.perf_counter() - t0
         print(f"decode {args.new_tokens} steps: {dt*1e3:.0f} ms "
               f"({args.batch*args.new_tokens/dt:.1f} tok/s)")
+        if sink is not None:
+            sink.close()
+            print(f"telemetry: {sink.emitted} records -> {sink.path}")
 
 
 if __name__ == "__main__":

@@ -36,16 +36,21 @@ def make_standard_train_step(model, config: Config) -> Callable:
 
 def make_train_step(model, config: Config, mesh, *,
                     collective: Optional[str] = None,
-                    force_standard: bool = False) -> Tuple[Callable, str]:
+                    force_standard: bool = False,
+                    tap: Optional[Callable] = None) -> Tuple[Callable, str]:
     """Returns (step_fn, kind) with kind in {"fl_round", "fleet_fl_round",
     "standard"}.
 
     ``collective=None`` resolves ``config.quant.wire_format``.  When
     ``config.fleet.enabled`` the FL round threads a
     ``population.fleet.FleetState`` — signature (params, batch, rng,
-    fleet) -> (params, metrics, fleet) — and kind is "fleet_fl_round"."""
+    fleet) -> (params, metrics, fleet) — and kind is "fleet_fl_round".
+    ``tap`` streams each round's metrics dict out of the shard_map while
+    the step executes (see ``make_fl_round``; e.g.
+    ``repro.obs.tap.shard0_sink_tap``); FL kinds only, ``None`` = off."""
     if not force_standard:
-        fl_round = fl_mod.make_fl_round(model, config, mesh, collective=collective)
+        fl_round = fl_mod.make_fl_round(model, config, mesh,
+                                        collective=collective, tap=tap)
         if fl_round is not None:
             kind = "fleet_fl_round" if config.fleet.enabled else "fl_round"
             return fl_round, kind

@@ -43,6 +43,17 @@ The assigned powers ride the round metrics (``power_q50_w`` etc. next to
 ``outage_rate`` vs ``outage_target`` and budget-vs-realized energy) and
 persist on the checkpointed ``FleetState`` (``p_last``).
 
+Streaming telemetry (``--telemetry-dir`` / ``--telemetry-every``):
+
+  | flag                  | effect                                         |
+  |-----------------------|------------------------------------------------|
+  | ``--telemetry-dir D`` | stream one versioned ``train_step`` JSONL      |
+  |                       | record per FL round to ``D/telemetry.jsonl``   |
+  |                       | WHILE the step executes (shard-0 ``io_callback``|
+  |                       | tap; see ``repro.obs``).  Off by default — the |
+  |                       | lowered HLO is byte-identical without it.      |
+  | ``--telemetry-every N`` | keep every N-th record (default 1 = all)     |
+
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
       --fleet-size 1000000 --selection lyapunov --power-policy fbl_target \
       --collective auto \
@@ -87,6 +98,11 @@ def main():
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--telemetry-dir", default="",
+                    help="stream one JSONL telemetry record per FL round "
+                         "here while the step executes (off when empty)")
+    ap.add_argument("--telemetry-every", type=int, default=1,
+                    help="keep every N-th telemetry record (default 1)")
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args()
 
@@ -135,8 +151,23 @@ def main():
 
     steps = args.steps or cfg.train.steps
     collective = fl_mod.resolve_collective(cfg, args.collective)
+    sink = tap = None
+    if args.telemetry_dir:
+        from repro.obs import sinks as obs_sinks
+        from repro.obs import tap as obs_tap
+        sink = obs_sinks.JsonlSink(args.telemetry_dir)
+        tap = obs_tap.shard0_sink_tap(sink, kind="train_step",
+                                      every=max(1, args.telemetry_every))
     step_fn, kind = steps_mod.make_train_step(model, cfg, mesh,
-                                              collective=collective)
+                                              collective=collective, tap=tap)
+    if sink is not None and kind == "standard":
+        # the standard step has no FL round (and no tap site); close the
+        # empty stream rather than leave a half-open file behind
+        sink.close()
+        sink = tap = None
+        print("telemetry: no FL round on this mesh/config — stream off")
+    elif sink is not None:
+        print(f"telemetry: streaming train_step records -> {sink.path}")
     print(f"step kind: {kind} (collective={collective}, "
           f"quant bits={cfg.quant.bits}, q={cfg.channel.error_prob})")
     fleet = None
@@ -209,6 +240,10 @@ def main():
                 if fleet is not None:
                     save_checkpoint(fleet_ckpt_dir, step + 1, fleet)
         print(f"done: {steps - start} steps in {time.time()-t0:.1f}s")
+        if sink is not None:
+            jax.block_until_ready(params)   # flush in-flight tap callbacks
+            sink.close()
+            print(f"telemetry: {sink.emitted} records -> {sink.path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,102 @@
+"""Streaming round taps: ``jax.experimental.io_callback`` emission of the
+per-round telemetry dict FROM INSIDE the jitted computation.
+
+Two traced-side helpers cover the two runtimes:
+
+* :func:`emit_in_scan` — inside a ``lax.scan`` body (the simulator's
+  ``run_rounds``).  ``ordered=True`` keeps the host callbacks in round
+  order, so sinks see round t before round t+1 while the scan is still
+  executing later rounds.
+* :func:`emit_on_shard0` — inside a ``shard_map`` body (the distributed
+  ``make_fl_round``).  The callback fires on EVERY shard (that is how
+  ``io_callback`` lowers under fully-manual shard_map on the jax-0.4.37
+  floor), so the traced side passes the flat cohort-shard index along and
+  the HOST adapter filters to shard 0 — one record per round, not one
+  per device.
+
+Both are strict no-ops when ``tap is None``: nothing is traced, so the
+lowered HLO is byte-identical to a build that never heard of obs (the
+zero-cost-off invariant ``tests/test_obs.py`` pins).
+
+The host adapters (:func:`scan_sink_tap` / :func:`shard0_sink_tap`) turn
+a :class:`~repro.obs.sinks.MetricsSink` into the host callable the taps
+invoke: each call converts the telemetry pytree (np arrays by the time
+it reaches the host) into one versioned record (``sinks.make_record``)
+with a monotonically increasing round index, and emits it.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+from jax.experimental import io_callback
+
+from repro.obs import sinks as _sinks
+
+#: a host callable receiving the telemetry dict (np-converted pytree)
+ScanTap = Callable[[Dict[str, Any]], None]
+#: a host callable receiving (telemetry dict, flat shard index)
+ShardTap = Callable[[Dict[str, Any], Any], None]
+
+
+def emit_in_scan(tel: Dict[str, Any], tap: Optional[ScanTap]) -> None:
+    """Stream one round's telemetry from inside a ``lax.scan`` body.
+
+    ``tap=None`` traces NOTHING (zero-cost-off); otherwise an ordered
+    ``io_callback`` ships ``tel`` to the host as the scan executes.
+    """
+    if tap is None:
+        return
+    io_callback(tap, None, tel, ordered=True)
+
+
+def emit_on_shard0(tel: Dict[str, Any], shard_index: jax.Array,
+                   tap: Optional[ShardTap]) -> None:
+    """Stream one round's metrics from inside a ``shard_map`` body.
+
+    The callback lowers onto every shard; ``shard_index`` (the flat
+    cohort-shard id the round already computes) rides along so the host
+    adapter keeps only shard 0's copy.  ``tap=None`` traces nothing.
+    """
+    if tap is None:
+        return
+    io_callback(tap, None, tel, shard_index, ordered=False)
+
+
+def scan_sink_tap(sink: "_sinks.MetricsSink", *, kind: str = "fl_round",
+                  start_round: int = 0, every: int = 1) -> ScanTap:
+    """Host adapter: telemetry dict -> versioned record -> ``sink.emit``.
+
+    Rounds are numbered ``start_round, start_round+1, ...`` in callback
+    arrival order (the ordered scan tap guarantees that IS round order).
+    ``every`` keeps only every N-th round's record (round index still
+    advances every callback, so kept records carry their true round).
+    """
+    counter = [start_round]
+
+    def tap(tel: Dict[str, Any]) -> None:
+        r = counter[0]
+        counter[0] += 1
+        if (r - start_round) % every:
+            return
+        sink.emit(_sinks.make_record(kind, r, tel))
+
+    return tap
+
+
+def shard0_sink_tap(sink: "_sinks.MetricsSink", *, kind: str = "fl_round",
+                    start_round: int = 0, every: int = 1) -> ShardTap:
+    """Host adapter for the shard_map tap: drop every shard but 0, then
+    record exactly like :func:`scan_sink_tap`."""
+    counter = [start_round]
+
+    def tap(tel: Dict[str, Any], shard_index) -> None:
+        if int(shard_index) != 0:
+            return
+        r = counter[0]
+        counter[0] += 1
+        if (r - start_round) % every:
+            return
+        sink.emit(_sinks.make_record(kind, r, tel))
+
+    return tap

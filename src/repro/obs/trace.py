@@ -1,0 +1,55 @@
+"""Phase-attributed tracing: named spans over the wire/fleet phases.
+
+:func:`phase_span` wraps ``jax.named_scope`` — inside a jitted function
+it lands the span path in every enclosed HLO op's
+``metadata={op_name="jit(f)/.../<span>/<op>"}``, which is what
+``benchmarks/profile_summary.py`` joins against a ``jax.profiler`` trace
+(whose device events carry only the post-fusion ``hlo_op`` names) to
+attribute device time per phase.  :func:`host_span` wraps
+``jax.profiler.TraceAnnotation`` for host-side (un-jitted) sections.
+
+Span names are hierarchical ``area/phase`` strings; the canonical wire
+phases (mirroring ``telemetry.wire_phase_split``'s keys) are in
+:data:`WIRE_PHASES`, the fleet state-machine phases in
+:data:`FLEET_PHASES`.  Nested spans concatenate
+(``wire/quantize_pack/pallas/quantize_pack_chunk``) — the profile
+summary attributes an op to the OUTERMOST known phase on its path.
+"""
+from __future__ import annotations
+
+import jax
+
+#: the wire phases of one collective round, in execution order
+WIRE_PHASES = (
+    "wire/quantize_pack",    # quantize -> pack -> chunk front-end
+    "wire/psum",             # one-shot all-reduce (paper/int/packed)
+    "wire/ring_hops",        # ring ppermute+accumulate hop loop
+    "wire/reduce_scatter",   # rsag scatter phase
+    "wire/all_gather",       # rsag gather phase (incl. fused f32 store)
+    "wire/unpack_dequant",   # unpack + dequantize back-end
+)
+
+#: the fleet round_update state-machine phases, in execution order
+FLEET_PHASES = (
+    "fleet/advance_channel",
+    "fleet/power_assign",
+    "fleet/rates_cost",
+    "fleet/select",
+    "fleet/drop_realize",
+    "fleet/energy_ledger",
+)
+
+#: the FL round phases outside the wire/fleet areas
+FL_PHASES = ("fl/local_steps", "fl/apply")
+
+
+def phase_span(name: str):
+    """A trace-time span: every op traced inside carries ``name`` on its
+    HLO ``op_name`` metadata path (works inside jit/scan/shard_map)."""
+    return jax.named_scope(name)
+
+
+def host_span(name: str):
+    """A host-side profiler span (``jax.profiler.TraceAnnotation``) for
+    un-jitted sections — shows up as a named slice in the trace viewer."""
+    return jax.profiler.TraceAnnotation(name)

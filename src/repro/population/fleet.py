@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from repro.config.base import SELECTION_POLICIES, Config
 from repro.core import channel as ch
 from repro.core import energy as energy_mod
+from repro.obs import trace as obs_trace
 from repro.population import power as ppower
 
 
@@ -307,28 +308,34 @@ def round_update(state: FleetState, key: jax.Array, config: Config,
     from repro.population import errors as perrors
     from repro.population import selection as psel
     k_ch, k_sel, k_drop = jax.random.split(key, 3)
-    state = advance_channel(state, k_ch, config)
-    power = ppower.assigned_power(config, state.gain2(), state.battery_j,
-                                  state.capacity_j, num_params)
-    state = state._replace(p_last=power)
-    rates = fleet_rates(state, config.channel, power)
-    cost = round_cost_j(config, rates, num_params, tx_power_w=power,
-                        wire_bits_per_param=wire_bits_per_param)
-    idx, valid = psel.select_cohort(config.fleet.selection, state, rates,
-                                    k, k_sel, cost,
-                                    lyapunov_v=config.power.lyapunov_v)
+    with obs_trace.phase_span("fleet/advance_channel"):
+        state = advance_channel(state, k_ch, config)
+    with obs_trace.phase_span("fleet/power_assign"):
+        power = ppower.assigned_power(config, state.gain2(),
+                                      state.battery_j, state.capacity_j,
+                                      num_params)
+        state = state._replace(p_last=power)
+    with obs_trace.phase_span("fleet/rates_cost"):
+        rates = fleet_rates(state, config.channel, power)
+        cost = round_cost_j(config, rates, num_params, tx_power_w=power,
+                            wire_bits_per_param=wire_bits_per_param)
+    with obs_trace.phase_span("fleet/select"):
+        idx, valid = psel.select_cohort(config.fleet.selection, state,
+                                        rates, k, k_sel, cost,
+                                        lyapunov_v=config.power.lyapunov_v)
     rates_sel = rates[idx]
-    # outage = the uplink cannot finish by the deadline at the ASSIGNED
-    # power: rate at or below power.min_rate (subsumes the rate<=0 deep
-    # fade) — the ONE definition drops, IPW reach and telemetry share
-    r_min = jnp.float32(ppower.min_rate(config, num_params))
-    outage_sel = valid * (rates_sel <= r_min).astype(jnp.float32)
-    lam = valid * perrors.realize_packet_success(k_drop, rates_sel,
-                                                 config.channel.error_prob,
-                                                 min_rate=r_min)
-    state, charge = debit_battery(state, idx, valid * cost[idx])
-    state, harvested = credit_harvest(state, config)
-    state = advance_cursor(state, k)
+    with obs_trace.phase_span("fleet/drop_realize"):
+        # outage = the uplink cannot finish by the deadline at the ASSIGNED
+        # power: rate at or below power.min_rate (subsumes the rate<=0 deep
+        # fade) — the ONE definition drops, IPW reach and telemetry share
+        r_min = jnp.float32(ppower.min_rate(config, num_params))
+        outage_sel = valid * (rates_sel <= r_min).astype(jnp.float32)
+        lam = valid * perrors.realize_packet_success(
+            k_drop, rates_sel, config.channel.error_prob, min_rate=r_min)
+    with obs_trace.phase_span("fleet/energy_ledger"):
+        state, charge = debit_battery(state, idx, valid * cost[idx])
+        state, harvested = credit_harvest(state, config)
+        state = advance_cursor(state, k)
     return state, FleetRoundInfo(idx=idx, valid=valid, lam=lam,
                                  rates_sel=rates_sel, cost_sel=cost[idx],
                                  power_sel=power[idx],

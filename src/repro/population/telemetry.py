@@ -158,12 +158,15 @@ def expand_history(stacked: Dict[str, jax.Array], rounds: int,
     Keeps the legacy keys (round/loss/accuracy/survivors/energy_j/tau_s)
     — ``energy_j`` is now the round's REALIZED cohort energy (the battery
     debit), not the static expected value — and adds the fleet extras.
+    ``accuracy`` is the ONE canonical metric key: the scan body overwrites
+    it in place when an ``eval_fn`` is folded in (no shadow ``metric``
+    alias), so streamed tap records and this expansion read the same key.
     """
     host = {k: np.asarray(v) for k, v in stacked.items()}
     history = []
     for t in range(rounds):
         h: Dict[str, Any] = {"round": start_round + t,
-                             "accuracy": float(host["metric"][t]),
+                             "accuracy": float(host["accuracy"][t]),
                              "energy_j": float(host["cohort_energy_j"][t])}
         for k in _SCALAR_KEYS:
             h[k] = float(host[k][t])
