@@ -564,12 +564,18 @@ def make_fl_round(model, config: Config, mesh, *,
     to it as ``metrics["wire_phase_bits_per_param"]`` (e.g. rsag's
     reduce_scatter/all_gather legs — ``population.telemetry``).
 
-    ``tap`` (a host callable taking (metrics dict, flat shard index) —
-    usually ``obs.shard0_sink_tap(sink)``) streams each round's metrics
-    out of the shard_map via ``io_callback`` while the step executes; the
-    callback fires on every shard, so the host adapter filters to shard 0
-    (one record per round).  ``tap=None`` traces nothing — the lowered
-    HLO is byte-identical to a no-obs build.
+    ``tap`` (a host callable taking (metrics dict, flat shard index,
+    round index) — usually ``obs.shard0_sink_tap(sink)``) streams each
+    round's metrics out of the shard_map via ``io_callback`` while the
+    step executes; the callback fires on every shard, so the host adapter
+    filters to shard 0 (one record per round).  A TAPPED round fn takes
+    one extra trailing argument — a replicated int32 ``step`` scalar —
+    whose value stamps the streamed record: the callback is unordered
+    (an ordered one threads a token through the jit root tuple, crashing
+    0.4.37 sharding propagation under ``out_shardings``), so with async
+    dispatch the host cannot number records by arrival.  ``tap=None``
+    traces nothing — the lowered HLO is byte-identical to a no-obs build,
+    and the signature stays exactly as documented above.
     """
     fl = config.fl
     qcfg = config.quant
@@ -652,7 +658,20 @@ def make_fl_round(model, config: Config, mesh, *,
                 shard = shard * int(mesh.shape[a]) + jax.lax.axis_index(a)
         return shard
 
-    def local_round(params, batch, rng):
+    def _cohort_index():
+        # flat cohort index over the DATA axes only — the identity every
+        # model-axis replica of one cohort shares.  Cohort-shaped vectors
+        # (FleetRoundInfo.lam, length num_shards) MUST be indexed with
+        # this, never _flat_shard(): on the pre-0.7 fully-Manual floor
+        # the latter also ranges over model axes, so the gather would
+        # OOB-clamp and replicas of one cohort would read different λ —
+        # divergent "replicated" outputs that check_vma=False hides.
+        shard = jnp.int32(0)
+        for a, s in zip(axes, axis_sizes):
+            shard = shard * s + jax.lax.axis_index(a)
+        return shard
+
+    def local_round(params, batch, rng, step=None):
         rng = _shard_rng(rng)
         lam = ch.sample_packet_success(jax.random.fold_in(rng, 11), (),
                                        config.channel.error_prob)
@@ -660,10 +679,10 @@ def make_fl_round(model, config: Config, mesh, *,
                                                           rng, lam)
         metrics = pop_tel.distributed_metrics(
             plan, loss=mean_loss, survivors=survivors)
-        obs_tap.emit_on_shard0(metrics, _flat_shard(), tap)
+        obs_tap.emit_on_shard0(metrics, _flat_shard(), step, tap)
         return new_params, metrics
 
-    def fleet_round(params, batch, rng, fleet):
+    def fleet_round(params, batch, rng, fleet, step=None):
         # the fleet update is REPLICATED: identical inputs (fleet, raw rng)
         # on every shard compute the identical selection, so each shard
         # just reads its own λ at its flat cohort index — no collective.
@@ -678,7 +697,6 @@ def make_fl_round(model, config: Config, mesh, *,
         fleet, info = pop_fleet.round_update(
             fleet, jax.random.fold_in(rng, _FLEET_STREAM), config,
             num_params, num_shards)
-        shard = _flat_shard()
         delta_scale = None
         if config.fleet.error_reweight:
             delta_scale = pop_errors.ipw_delta_scale(
@@ -687,7 +705,8 @@ def make_fl_round(model, config: Config, mesh, *,
                 min_rate=pop_power.min_rate(config, num_params))
 
         new_params, mean_loss, survivors = _cohort_update(
-            params, batch, _shard_rng(rng), info.lam[shard], delta_scale)
+            params, batch, _shard_rng(rng), info.lam[_cohort_index()],
+            delta_scale)
 
         metrics = pop_tel.distributed_metrics(
             plan, loss=mean_loss, survivors=survivors,
@@ -697,7 +716,7 @@ def make_fl_round(model, config: Config, mesh, *,
                 outage_sel=info.outage_sel, cost_sel=info.cost_sel,
                 harvest_j=info.harvest_j,
                 error_prob=config.channel.error_prob))
-        obs_tap.emit_on_shard0(metrics, shard, tap)
+        obs_tap.emit_on_shard0(metrics, _flat_shard(), step, tap)
         return new_params, metrics, fleet
 
     P = jax.sharding.PartitionSpec
@@ -707,15 +726,18 @@ def make_fl_round(model, config: Config, mesh, *,
     metric_specs = jax.tree_util.tree_map(
         lambda _: P(), pop_tel.distributed_metrics_structure(plan,
                                                              with_fleet))
+    # a tapped round takes one extra trailing arg: the replicated int32
+    # ``step`` scalar that stamps the streamed record (see ``tap`` above)
+    step_specs = (P(),) if tap is not None else ()
     if with_fleet:
         return compat.shard_map(
             fleet_round, mesh=mesh,
-            in_specs=(P(), batch_specs, P(), P()),
+            in_specs=(P(), batch_specs, P(), P()) + step_specs,
             out_specs=(P(), metric_specs, P()),
             check_vma=False, axis_names=set(axes))
     return compat.shard_map(
         local_round, mesh=mesh,
-        in_specs=(P(), batch_specs, P()),
+        in_specs=(P(), batch_specs, P()) + step_specs,
         out_specs=(P(), metric_specs),
         check_vma=False, axis_names=set(axes))
 

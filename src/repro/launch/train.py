@@ -156,6 +156,9 @@ def main():
         from repro.obs import sinks as obs_sinks
         from repro.obs import tap as obs_tap
         sink = obs_sinks.JsonlSink(args.telemetry_dir)
+        # records carry the loop's absolute step index via the tapped
+        # step's trailing scalar, so a resumed run appending to an
+        # existing telemetry.jsonl stays monotonic in true step index
         tap = obs_tap.shard0_sink_tap(sink, kind="train_step",
                                       every=max(1, args.telemetry_every))
     step_fn, kind = steps_mod.make_train_step(model, cfg, mesh,
@@ -198,13 +201,19 @@ def main():
                                                         fleet)
                 print(f"restored fleet state step "
                       f"{latest_step(fleet_ckpt_dir)}")
+        # tapped FL steps take a trailing int32 step scalar (the record's
+        # round stamp); untapped signatures are unchanged
+        step_shardings = (None,) if tap is not None else ()
         if fleet is not None:
             jitted = jax.jit(step_fn,
-                             in_shardings=(p_shardings, None, None, None),
+                             in_shardings=(p_shardings, None, None, None)
+                             + step_shardings,
                              out_shardings=(p_shardings, None, None),
                              donate_argnums=(0,))
         else:
-            jitted = jax.jit(step_fn, in_shardings=(p_shardings, None, None),
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_shardings, None, None)
+                             + step_shardings,
                              out_shardings=(p_shardings, None),
                              donate_argnums=(0,))
 
@@ -214,10 +223,12 @@ def main():
             key, k_data, k_step = jax.random.split(key, 3)
             batch = token_batch(k_data, cfg.train.global_batch,
                                 cfg.train.seq_len, cfg.model.vocab_size)
+            step_arg = (jnp.int32(step),) if tap is not None else ()
             if fleet is not None:
-                params, metrics, fleet = jitted(params, batch, k_step, fleet)
+                params, metrics, fleet = jitted(params, batch, k_step, fleet,
+                                                *step_arg)
             else:
-                params, metrics = jitted(params, batch, k_step)
+                params, metrics = jitted(params, batch, k_step, *step_arg)
             if step % args.log_every == 0:
                 loss = float(metrics["loss"])
                 tok_s = (cfg.train.global_batch * cfg.train.seq_len

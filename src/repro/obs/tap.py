@@ -12,7 +12,14 @@ Two traced-side helpers cover the two runtimes:
   ``io_callback`` lowers under fully-manual shard_map on the jax-0.4.37
   floor), so the traced side passes the flat cohort-shard index along and
   the HOST adapter filters to shard 0 — one record per round, not one
-  per device.
+  per device.  The ROUND index also rides in the payload (tapped round
+  fns take a trailing replicated ``step`` scalar): the shard callback
+  must stay UNORDERED — an ordered one threads a token through the jit
+  root tuple, which crashes XLA 0.4.37's sharding propagation under
+  ``out_shardings`` — so with async dispatch callbacks from consecutive
+  steps may arrive out of order, and only a payload stamp numbers
+  records correctly (it also makes resumed runs exact: the stamp is the
+  actual step index, not a host-side arrival count).
 
 Both are strict no-ops when ``tap is None``: nothing is traced, so the
 lowered HLO is byte-identical to a build that never heard of obs (the
@@ -22,7 +29,8 @@ The host adapters (:func:`scan_sink_tap` / :func:`shard0_sink_tap`) turn
 a :class:`~repro.obs.sinks.MetricsSink` into the host callable the taps
 invoke: each call converts the telemetry pytree (np arrays by the time
 it reaches the host) into one versioned record (``sinks.make_record``)
-with a monotonically increasing round index, and emits it.
+and emits it — the scan adapter numbers rounds by counting its ordered
+callbacks, the shard adapter reads the payload's round stamp.
 """
 from __future__ import annotations
 
@@ -35,8 +43,8 @@ from repro.obs import sinks as _sinks
 
 #: a host callable receiving the telemetry dict (np-converted pytree)
 ScanTap = Callable[[Dict[str, Any]], None]
-#: a host callable receiving (telemetry dict, flat shard index)
-ShardTap = Callable[[Dict[str, Any], Any], None]
+#: a host callable receiving (telemetry dict, flat shard index, round index)
+ShardTap = Callable[[Dict[str, Any], Any, Any], None]
 
 
 def emit_in_scan(tel: Dict[str, Any], tap: Optional[ScanTap]) -> None:
@@ -51,16 +59,25 @@ def emit_in_scan(tel: Dict[str, Any], tap: Optional[ScanTap]) -> None:
 
 
 def emit_on_shard0(tel: Dict[str, Any], shard_index: jax.Array,
-                   tap: Optional[ShardTap]) -> None:
+                   round_index, tap: Optional[ShardTap]) -> None:
     """Stream one round's metrics from inside a ``shard_map`` body.
 
     The callback lowers onto every shard; ``shard_index`` (the flat
     cohort-shard id the round already computes) rides along so the host
-    adapter keeps only shard 0's copy.  ``tap=None`` traces nothing.
+    adapter keeps only shard 0's copy, and ``round_index`` (the tapped
+    round fn's trailing replicated ``step`` scalar) stamps the record —
+    the callback is unordered (an ordered one crashes 0.4.37's sharding
+    propagation under ``out_shardings``), so arrival order cannot number
+    rounds.  ``tap=None`` traces nothing.
     """
     if tap is None:
         return
-    io_callback(tap, None, tel, shard_index, ordered=False)
+    if round_index is None:
+        raise ValueError(
+            "a tapped distributed round needs its step index: call the "
+            "round fn with the trailing `step` scalar so streamed records "
+            "carry their true round stamp")
+    io_callback(tap, None, tel, shard_index, round_index, ordered=False)
 
 
 def scan_sink_tap(sink: "_sinks.MetricsSink", *, kind: str = "fl_round",
@@ -85,17 +102,20 @@ def scan_sink_tap(sink: "_sinks.MetricsSink", *, kind: str = "fl_round",
 
 
 def shard0_sink_tap(sink: "_sinks.MetricsSink", *, kind: str = "fl_round",
-                    start_round: int = 0, every: int = 1) -> ShardTap:
+                    every: int = 1) -> ShardTap:
     """Host adapter for the shard_map tap: drop every shard but 0, then
-    record exactly like :func:`scan_sink_tap`."""
-    counter = [start_round]
+    record with the payload's round stamp.  No host-side counter: the
+    unordered shard callback may deliver consecutive steps out of order,
+    so the record's round is the ``round_index`` the traced side shipped
+    (which also keeps a resumed run's appended JSONL stream monotonic in
+    true step index).  ``every`` keeps steps whose ABSOLUTE index is a
+    multiple of ``every``."""
 
-    def tap(tel: Dict[str, Any], shard_index) -> None:
+    def tap(tel: Dict[str, Any], shard_index, round_index) -> None:
         if int(shard_index) != 0:
             return
-        r = counter[0]
-        counter[0] += 1
-        if (r - start_round) % every:
+        r = int(round_index)
+        if r % every:
             return
         sink.emit(_sinks.make_record(kind, r, tel))
 

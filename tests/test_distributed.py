@@ -743,6 +743,59 @@ def test_fleet_round_bit_identical_across_collectives():
     """)
 
 
+def test_fleet_lambda_consistent_across_model_replicas():
+    """Regression: the fleet round must index the cohort-shaped λ vector
+    (``FleetRoundInfo.lam``, length num_shards) with the DATA-axes-only
+    cohort index.  On the pre-0.7 fully-Manual floor the model axis also
+    replicates the body, and indexing λ with the all-axes flat shard id
+    OOB-clamps the gather — model-axis replicas of one cohort then read
+    different λ, so the per-device buffers of outputs that out_specs
+    declare replicated (params, survivors) silently diverge
+    (check_vma=False hides it; a later reshard over "model" — e.g.
+    train.py's out_shardings — would mix the divergent columns).  Assert
+    every device holds the SAME bytes, on both mesh shapes."""
+    run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.core.fl import make_fl_round
+    from repro.population import fleet as pfleet
+    from repro.data.synthetic import token_batch
+    from repro.utils.compat import make_mesh, set_mesh
+
+    for shape, names in (((2, 4), ("data", "model")),
+                         ((2, 2, 2), ("pod", "data", "model"))):
+        mesh = make_mesh(shape, names)
+        base = reduced(get_config("olmo-1b"))
+        cfg = dataclasses.replace(
+            base,
+            channel=dataclasses.replace(base.channel, error_prob=0.3),
+            power=dataclasses.replace(base.power, policy="fbl_target"),
+            fleet=dataclasses.replace(base.fleet, size=64,
+                                      selection="rate_aware",
+                                      harvest_j_per_round=0.05))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = token_batch(jax.random.PRNGKey(1), 12, 32,
+                            cfg.model.vocab_size)
+        fleet0 = pfleet.init_fleet(jax.random.PRNGKey(cfg.fleet.seed), cfg)
+        with set_mesh(mesh):
+            f = jax.jit(make_fl_round(model, cfg, mesh, collective="int"))
+            p, fleet = params, fleet0
+            for seed in (2, 3, 4):
+                p, m, fleet = f(p, batch, jax.random.PRNGKey(seed), fleet)
+                surv = set(float(np.asarray(s.data))
+                           for s in m["survivors"].addressable_shards)
+                assert len(surv) == 1, (shape, seed, surv)
+                for leaf in jax.tree_util.tree_leaves(p):
+                    ref = np.asarray(leaf.addressable_shards[0].data)
+                    for s in leaf.addressable_shards[1:]:
+                        assert np.array_equal(ref, np.asarray(s.data)), (
+                            shape, seed)
+    print("OK")
+    """)
+
+
 def test_wire_format_knob_selects_collective():
     """make_fl_round(collective=None) resolves QuantConfig.wire_format."""
     run_py("""

@@ -134,10 +134,23 @@ def test_shard0_sink_tap_drops_other_shards():
     sink = obs_sinks.RecordingSink()
     tap = obs_tap.shard0_sink_tap(sink, kind="train_step")
     for shard in (0, 1, 2, 3):     # one round, every shard fires
-        tap({"loss": np.float32(1.0)}, np.int32(shard))
-    tap({"loss": np.float32(2.0)}, np.int32(0))
+        tap({"loss": np.float32(1.0)}, np.int32(shard), np.int32(0))
+    tap({"loss": np.float32(2.0)}, np.int32(0), np.int32(1))
     assert [r["round"] for r in sink.records] == [0, 1]
     assert [r["loss"] for r in sink.records] == [1.0, 2.0]
+
+
+def test_shard0_sink_tap_stamps_rounds_from_payload_not_arrival():
+    """The shard tap is an UNORDERED io_callback: consecutive async
+    steps may arrive out of order, so the record's round must be the
+    payload stamp — never a host-side arrival count.  ``every`` keeps
+    absolute-index multiples (resume-stable)."""
+    sink = obs_sinks.RecordingSink()
+    tap = obs_tap.shard0_sink_tap(sink, kind="train_step", every=2)
+    for r in (4, 3, 2, 6):         # arrival order != step order
+        tap({"loss": np.float32(r)}, np.int32(0), np.int32(r))
+    assert [r["round"] for r in sink.records] == [4, 2, 6]
+    assert [r["loss"] for r in sink.records] == [4.0, 2.0, 6.0]
 
 
 # ---------------------------------------------------------------------------
@@ -299,10 +312,13 @@ def test_distributed_tap_all_modes_records_match_metrics():
                 tap = obs_tap.shard0_sink_tap(sink, kind="train_step")
                 f_off = jax.jit(make_fl_round(model, cfg, mesh,
                                               collective=mode))
+                # tapped round fns take a trailing step scalar that
+                # stamps the streamed record with its true round index
                 f_on = jax.jit(make_fl_round(model, cfg, mesh,
                                              collective=mode, tap=tap))
                 p_off, m_off = f_off(params, batch, jax.random.PRNGKey(2))
-                p_on, m_on = f_on(params, batch, jax.random.PRNGKey(2))
+                p_on, m_on = f_on(params, batch, jax.random.PRNGKey(2),
+                                  jnp.int32(7))
                 jax.block_until_ready(p_on)
                 # exactly one record per step: every shard fired the
                 # callback, the host adapter kept only shard 0
@@ -310,7 +326,7 @@ def test_distributed_tap_all_modes_records_match_metrics():
                                                 len(sink.records))
                 rec = sink.records[0]
                 assert obs_sinks.validate_record(rec) == []
-                assert rec["kind"] == "train_step" and rec["round"] == 0
+                assert rec["kind"] == "train_step" and rec["round"] == 7
                 assert rec["loss"] == float(m_on["loss"])
                 assert rec["survivors"] == float(m_on["survivors"])
                 assert (rec["wire_bits_per_param"]
